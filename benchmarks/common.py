@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: wall-clock timing on the real CPU device.
+
+The paper's own experiments are CPU prediction-speed measurements, so the
+Table-2 analogue here is a GENUINE measurement, not a proxy (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results")
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Best-of-N wall time of a jitted fn (seconds); blocks on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def fmt_table(rows: list[dict], cols: list[str]) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in cols}
+    out = [" | ".join(c.ljust(widths[c]) for c in cols)]
+    out.append("-|-".join("-" * widths[c] for c in cols))
+    for r in rows:
+        out.append(" | ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+    return "\n".join(out)

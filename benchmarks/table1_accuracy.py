@@ -1,0 +1,79 @@
+"""Table-1 reproduction: per data set — d, gamma_max, gamma, n_test, n_sv,
+exact accuracy, and the fraction of labels that DIFFER between exact and
+approximated models.
+
+Protocol follows the paper: gamma is chosen at the paper's gamma/gamma_MAX
+RATIO for each data set (our synthetic stand-ins have different norms, so
+absolute gammas would not be comparable; the ratio is what the bound is
+about). LS-SVM training (all points become SVs — the regime the paper
+highlights for maximal compression).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    approximate,
+    approx_decision_function_checked,
+    decision_function,
+    gamma_max,
+)
+from repro.data.synthetic import make_dataset
+from repro.svm import train_lssvm
+from benchmarks.common import fmt_table, save_json
+
+# paper Table 1 gamma / gamma_MAX ratios (first row per data set + extras)
+PAPER_RATIOS = {
+    "a9a": [0.556, 1.111, 5.556],
+    "mnist": [0.1],
+    "ijcnn1": [0.781],
+    "sensit": [1.2],
+    "epsilon": [1.4],
+}
+# keep the KKT solve tractable on 1 CPU core: n_train ~<= 1500
+SCALES = {"a9a": 0.045, "mnist": 0.022, "ijcnn1": 0.03, "sensit": 0.018, "epsilon": 0.0035}
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, ratios in PAPER_RATIOS.items():
+        Xtr, ytr, Xte, yte, spec = make_dataset(name, scale=SCALES[name], seed=0)
+        Xtr_j, ytr_j = jnp.asarray(Xtr), jnp.asarray(ytr)
+        Xte_j = jnp.asarray(Xte)
+        gm = float(gamma_max(jnp.asarray(np.concatenate([Xtr, Xte]))))
+        for ratio in ratios:
+            gamma = gm * ratio
+            m = train_lssvm(Xtr_j, ytr_j, jnp.float32(gamma), jnp.float32(10.0))
+            f = np.asarray(decision_function(m, Xte_j))
+            am = approximate(m)
+            fh, valid = approx_decision_function_checked(am, Xte_j)
+            fh = np.asarray(fh)
+            acc = float((np.sign(f) == yte).mean())
+            diff = float((np.sign(fh) != np.sign(f)).mean())
+            rows.append({
+                "dataset": name,
+                "d": spec.d,
+                "gamma_max": round(gm, 6),
+                "gamma": round(gamma, 6),
+                "gamma/g_max": ratio,
+                "n_test": len(yte),
+                "n_sv": m.n_sv,
+                "acc%": round(100 * acc, 1),
+                "diff%": round(100 * diff, 2),
+                "bound_ok%": round(100 * float(np.asarray(valid).mean()), 1),
+            })
+    print("[table1] exact vs approximated label agreement (paper Table 1 analogue)")
+    print(fmt_table(rows, ["dataset", "d", "gamma_max", "gamma", "gamma/g_max",
+                           "n_test", "n_sv", "acc%", "diff%", "bound_ok%"]))
+    save_json("table1.json", rows)
+    # the paper's claim: under the bound, diff stays ~< 1%
+    under = [r for r in rows if r["gamma/g_max"] <= 1.0]
+    worst = max(r["diff%"] for r in under) if under else None
+    print(f"[table1] worst diff under the bound: {worst}% (paper: <1%)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

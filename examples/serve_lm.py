@@ -1,0 +1,41 @@
+"""LM serving demo: batched greedy decode with (a) the exact KV cache and
+(b) the paper-technique Maclaurin state — same model weights, same API.
+
+Prints the per-sequence cache footprint of both backends: the state is
+O(d^2) per head, independent of context length (the paper's n_sv -> d^2
+collapse with KV entries as support vectors).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.transformer import init_cache, init_params
+from repro.serve.decode_step import greedy_generate
+
+
+def cache_bytes(cache) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))
+
+
+def main():
+    cfg = get_config("smollm-135m").reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 4096
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, cfg.vocab_size)
+
+    for backend in ("softmax", "maclaurin"):
+        c = cfg.with_backend(backend)
+        cache = init_cache(c, B, S, params=params, dtype=jnp.float32)
+        toks, cache = greedy_generate(c, params, prompt, cache, steps=16, start_pos=0)
+        per_seq = cache_bytes(cache) / B
+        print(f"{backend:10s} backend: generated {toks.shape[1]} tokens/seq; "
+              f"cache {per_seq/1024:.1f} KiB/seq at S={S} "
+              f"({'grows with S' if backend == 'softmax' else 'independent of S'})")
+        print(f"{'':10s} sample tokens: {toks[0, :8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

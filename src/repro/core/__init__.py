@@ -1,0 +1,38 @@
+"""The paper's primary contribution: second-order Maclaurin collapse of
+RBF kernel expansions (exact model -> (c, v, M) quadratic form), with the
+validity bounds of §3.1 and the poly-2 relation of §3.2."""
+
+from repro.core.rbf import SVMModel, rbf_kernel, decision_function, predict_labels
+from repro.core.maclaurin import (
+    ApproxModel,
+    approximate,
+    approx_decision_function,
+    approx_decision_function_checked,
+    hybrid_decision_function,
+)
+from repro.core.bounds import (
+    gamma_max,
+    bound_holds,
+    maclaurin_exp,
+    maclaurin_rel_error,
+    validity_fraction,
+    REL_ERR_AT_HALF,
+)
+
+__all__ = [
+    "SVMModel",
+    "rbf_kernel",
+    "decision_function",
+    "predict_labels",
+    "ApproxModel",
+    "approximate",
+    "approx_decision_function",
+    "approx_decision_function_checked",
+    "hybrid_decision_function",
+    "gamma_max",
+    "bound_holds",
+    "maclaurin_exp",
+    "maclaurin_rel_error",
+    "validity_fraction",
+    "REL_ERR_AT_HALF",
+]

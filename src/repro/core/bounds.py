@@ -1,0 +1,75 @@
+"""Approximation-validity bounds (§3.1 and Appendix A of the paper).
+
+Three tools:
+
+  * ``maclaurin_rel_error``     — Eq A.2 / Fig 1: the absolute relative error
+                                  of the 2nd-order Maclaurin series of exp.
+  * ``gamma_max``               — pre-training bound: largest gamma for which
+                                  Eq 3.11 is guaranteed on a given data set.
+  * ``validity_fraction`` etc.  — run-time checks of Eq 3.11 / Eq 3.9.
+
+The guarantee chain:  |x| < 1/2  =>  rel.err(exp approx) < 3.05%   (A.2)
+                      |2 gamma x_i^T z| < 1/2  for all i           (3.9)
+      Cauchy-Schwarz: ||x_M||^2 ||z||^2 < 1/(16 gamma^2)           (3.11)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Eq A.2: sup_{|x|<1/2} |(e^x - 1 - x - x^2/2) / e^x| < 0.0305
+REL_ERR_AT_HALF = 0.0305
+
+
+def maclaurin_exp(x: Array) -> Array:
+    """Second-order Maclaurin series of exp: 1 + x + x^2/2 (Eq A.1)."""
+    return 1.0 + x + 0.5 * x * x
+
+
+def maclaurin_rel_error(x: Array) -> Array:
+    """Absolute relative error |(e^x - (1+x+x^2/2)) / e^x|  (Fig 1)."""
+    return jnp.abs((jnp.exp(x) - maclaurin_exp(x)) / jnp.exp(x))
+
+
+def gamma_max(X: Array) -> Array:
+    """Largest gamma guaranteeing Eq 3.11 for every pair drawn from data X.
+
+    Uses the max instance norm for both the SV and the test-point role
+    (the paper notes this is slightly over-conservative because the max-norm
+    instance need not become a support vector):
+
+        ||x_M||^2 ||z||^2 < 1/(16 gamma^2)   with ||z|| <= ||x_M||
+        =>  gamma < 1 / (4 ||x_M||^2)
+    """
+    max_sq = jnp.max(jnp.sum(X * X, axis=-1))
+    return 1.0 / (4.0 * max_sq)
+
+
+def bound_holds(max_sv_sq_norm: Array, z_sq_norm: Array, gamma: Array) -> Array:
+    """Eq 3.11 per test instance (broadcastable)."""
+    return max_sv_sq_norm * z_sq_norm < 1.0 / (16.0 * gamma**2)
+
+
+def exact_bound_holds(X_sv: Array, z: Array, gamma: Array) -> Array:
+    """Eq 3.9 directly (needs the inner products — used in tests only)."""
+    u = 2.0 * gamma * (X_sv @ z)
+    return jnp.all(jnp.abs(u) < 0.5)
+
+
+@jax.jit
+def validity_fraction(max_sv_sq_norm: Array, Z: Array, gamma: Array) -> Array:
+    """Fraction of a test batch adhering to Eq 3.11."""
+    z_sq = jnp.sum(Z * Z, axis=-1)
+    return jnp.mean(bound_holds(max_sv_sq_norm, z_sq, gamma).astype(jnp.float32))
+
+
+def max_abs_exponent(X_sv: Array, Z: Array, gamma: Array) -> Array:
+    """max_{i,j} |2 gamma x_i^T z_j| — the true quantity bounded by Eq 3.11.
+
+    O(n_sv * n) — diagnostic only, quantifies how conservative Cauchy-Schwarz
+    is on a given data set (the paper's epsilon-vs-sensit discussion, §4.2).
+    """
+    return jnp.max(jnp.abs(2.0 * gamma * (Z @ X_sv.T)))

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused causal softmax attention (flash / online-softmax).
+
+This is the fusion the roofline analysis calls for (EXPERIMENTS.md §Perf):
+the unfused blockwise attention's (chunk x S) score slabs account for most
+of the memory term on every train/prefill cell; keeping score tiles in VMEM
+removes that HBM traffic entirely.
+
+Algorithm (FlashAttention, re-tiled for the TPU memory hierarchy):
+grid = (batch*heads, q_blocks, kv_blocks), kv innermost. Running
+(m, l, acc) online-softmax state lives in VMEM scratch and persists across
+kv steps; each step is one (bq x d)x(d x bk) MXU GEMM + VPU epilogue:
+
+    s    = q k^T * scale                (MXU)
+    m'   = max(m, rowmax(s))
+    p    = exp(s - m')                  l' = l e^{m-m'} + rowsum(p)
+    acc  = acc e^{m-m'} + p v           (MXU)
+    out  = acc / l  at the last kv step
+
+VMEM per step (f32): q/k/v tiles (bq+2bk) x d + acc bq x d + s bq x bk —
+with bq=bk=256, d<=128: ~0.8 MB. Causally-skipped kv blocks are masked
+(grid still visits them; a production variant would prune the grid).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, bq: int, bk: int, kv_blocks: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bk, d)
+    v = v_ref[0]                                   # (bk, dv)
+    s = scale * jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (bq, bk)
+    if causal:
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    scale: float | None = None, causal: bool = True,
+    block_q: int = 256, block_k: int = 256, interpret: bool = False,
+) -> jax.Array:
+    """q,k: (BH, T, d); v: (BH, T, dv). Returns (BH, T, dv)."""
+    bh, t, d = q.shape
+    dv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    bq, bk = min(block_q, t), min(block_k, t)
+    t_pad = -(-t // bq) * bq
+    s_pad = -(-t // bk) * bk
+    pad_t, pad_s = t_pad - t, s_pad - t
+    qp = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0)))
+    # padded KEY positions must never win the softmax: they sit at
+    # cols > any real row, so the causal mask removes them for real rows.
+    assert causal or pad_s == 0, "non-causal padding needs an explicit mask"
+    q_blocks, kv_blocks = t_pad // bq, s_pad // bk
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=float(scale), bq=bq, bk=bk,
+            kv_blocks=kv_blocks, causal=causal,
+        ),
+        grid=(bh, q_blocks, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t_pad, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running sum
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :t, :]

@@ -1,0 +1,36 @@
+"""Jit'd public wrapper for fused flash attention (GQA layout aware)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+from repro.kernels.flash_attn.ref import softmax_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("scale", "causal", "block_q", "block_k", "use_pallas"))
+def flash_attention(
+    q, k, v, scale: float | None = None, causal: bool = True,
+    block_q: int = 256, block_k: int = 256, use_pallas: bool = True,
+):
+    """Causal fused attention. q,k: (B, H, T, d); v: (B, H, T, dv).
+
+    GQA callers repeat kv heads to q heads before the call (cheap: the
+    repeat is a broadcast, never materialized by XLA)."""
+    if not use_pallas:
+        return softmax_attention_ref(q, k, v, scale=scale)
+    b, h, t, d = q.shape
+    dv = v.shape[-1]
+    flat = lambda x: x.reshape(b * h, t, x.shape[-1])
+    out = flash_attention_pallas(
+        flat(q), flat(k), flat(v), scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=_on_cpu(),
+    )
+    return out.reshape(b, h, t, dv)

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the fused softmax-attention kernel."""
+
+from repro.kernels.maclaurin_attn.ref import softmax_attention_ref
+
+__all__ = ["softmax_attention_ref"]

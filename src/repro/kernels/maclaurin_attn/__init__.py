@@ -1,0 +1,13 @@
+from repro.kernels.maclaurin_attn.ops import maclaurin_attention
+from repro.kernels.maclaurin_attn.ref import (
+    maclaurin_attention_ref,
+    softmax_attention_ref,
+    maclaurin_weights,
+)
+
+__all__ = [
+    "maclaurin_attention",
+    "maclaurin_attention_ref",
+    "softmax_attention_ref",
+    "maclaurin_weights",
+]

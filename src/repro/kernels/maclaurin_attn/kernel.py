@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: chunked causal Maclaurin linear attention.
+
+The paper's O(n_sv d) -> O(d^2) collapse (Eq 3.7) applied to decode-time
+attention (DESIGN.md §4): with w(u) = 1 + u + u^2/2 and u = scale * q.k,
+
+    sum_j w(u_tj) v_j = (sum v_j) + scale * q^T (sum k_j v_j^T)
+                        + scale^2/2 * phi2(q)^T (sum phi2(k_j) v_j^T)
+
+where phi2(x) = vec(x x^T) in R^{d^2}. The running sums are the paper's
+(c, v, M) — order 0/1/2 moments of the stored set weighted by values.
+
+Chunked schedule (Based-style, arXiv:2402.18668, re-derived for the TPU
+memory hierarchy): grid = (batch*heads, T/Cs) with chunks innermost; the
+inter-chunk moment state lives in VMEM scratch and persists across grid
+steps (TPU grids execute sequentially per core). Each chunk does:
+
+  intra: u = scale Q K^T (Cs x Cs MXU GEMM), causal-mask, accumulate
+  inter: Q S1 and PHI2(Q) S2 GEMMs against the state
+  state: S1 += K^T V; S2 += PHI2(K)^T V (MXU), plus the order-0/1/2 key sums
+
+VMEM (f32, Cs=128, d=dv=128): S2 (d^2 x dv) 8 MB + PHI2 tile (Cs x d^2)
+8 MB + S1/K/Q/V tiles < 1 MB -> ~17 MB peak; fits v5e VMEM. For d > 128,
+tile S2 over a dv-grid axis (not needed for the assigned archs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _phi2(x):
+    """Row-wise vec(x x^T): (Cs, d) -> (Cs, d*d)."""
+    cs, d = x.shape
+    return (x[:, :, None] * x[:, None, :]).reshape(cs, d * d)
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    s1_ref, s2_ref, k1_ref, k2_ref, misc_ref,
+    *, scale: float, chunk: int,
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _reset():
+        s1_ref[...] = jnp.zeros_like(s1_ref)
+        s2_ref[...] = jnp.zeros_like(s2_ref)
+        k1_ref[...] = jnp.zeros_like(k1_ref)
+        k2_ref[...] = jnp.zeros_like(k2_ref)
+        misc_ref[...] = jnp.zeros_like(misc_ref)
+
+    q = q_ref[0]                       # (Cs, d)
+    k = k_ref[0]                       # (Cs, d)
+    v = v_ref[0]                       # (Cs, dv)
+    cs = q.shape[0]
+
+    # ---- intra-chunk (exact within the chunk) ----
+    u = scale * jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                  # (Cs, Cs)
+    w = 1.0 + u + 0.5 * u * u
+    rows = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 1)
+    w = jnp.where(rows >= cols, w, 0.0)
+    num = jax.lax.dot_general(
+        w, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                  # (Cs, dv)
+    den = jnp.sum(w, axis=-1)          # (Cs,)
+
+    # ---- inter-chunk (paper's quadratic-form readout of the state) ----
+    q2 = _phi2(q)                      # (Cs, d^2)
+    n_prev = misc_ref[0, 0]            # count of previous tokens
+    dv = o_ref.shape[-1]
+    num = num + misc_ref[1:2, :dv]     # order-0 term: sum_prev v_j
+    num = num + scale * jax.lax.dot_general(
+        q, s1_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    num = num + (0.5 * scale * scale) * jax.lax.dot_general(
+        q2, s2_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    den = den + n_prev
+    den = den + scale * (q @ k1_ref[0, :])
+    den = den + (0.5 * scale * scale) * (q2 @ k2_ref[0, :])
+
+    o_ref[0] = num / den[:, None]
+
+    # ---- state update (after readout: chunk c's keys are 'previous' for c+1) ----
+    k2feat = _phi2(k)                  # (Cs, d^2)
+    s1_ref[...] += jax.lax.dot_general(
+        k, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                  # K^T V: (d, dv)
+    s2_ref[...] += jax.lax.dot_general(
+        k2feat, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                  # (d^2, dv)
+    k1_ref[0, :] += jnp.sum(k, axis=0)
+    k2_ref[0, :] += jnp.sum(k2feat, axis=0)
+    misc_ref[0, 0] += jnp.float32(cs)
+    misc_ref[1:2, :v.shape[-1]] += jnp.sum(v, axis=0)[None, :]
+
+
+def maclaurin_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float | None = None,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q, k: (BH, T, d_k); v: (BH, T, d_v). Causal. Returns (BH, T, d_v)."""
+    bh, t, d = q.shape
+    dv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    t_pad = -(-t // chunk) * chunk
+    qp = jnp.pad(q, ((0, 0), (0, t_pad - t), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0)))
+    n_chunks = t_pad // chunk
+    misc_cols = max(dv, 2)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=float(scale), chunk=chunk),
+        grid=(bh, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t_pad, dv), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((d, dv), jnp.float32),        # S1
+            pltpu.VMEM((d * d, dv), jnp.float32),    # S2
+            pltpu.VMEM((1, d), jnp.float32),         # sum k
+            pltpu.VMEM((1, d * d), jnp.float32),     # sum phi2(k)
+            pltpu.VMEM((2, misc_cols), jnp.float32), # [count | sum v]
+        ],
+        interpret=interpret,
+    )(qp.astype(jnp.float32), kp.astype(jnp.float32), vp.astype(jnp.float32))
+    return out[:, :t, :]

@@ -1,0 +1,36 @@
+"""Jit'd public wrapper for chunked Maclaurin linear attention.
+
+Accepts (batch, heads, T, d) layouts, flattens to (B*H, T, d) for the
+kernel grid, and falls back to the quadratic jnp oracle when
+``use_pallas=False``. Interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maclaurin_attn.kernel import maclaurin_attention_pallas
+from repro.kernels.maclaurin_attn.ref import maclaurin_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("scale", "chunk", "use_pallas"))
+def maclaurin_attention(
+    q, k, v, scale: float | None = None, chunk: int = 128, use_pallas: bool = True
+):
+    """Causal Maclaurin attention. q,k: (B, H, T, d_k), v: (B, H, T, d_v)."""
+    if not use_pallas:
+        return maclaurin_attention_ref(q, k, v, scale=scale)
+    b, h, t, d = q.shape
+    dv = v.shape[-1]
+    flat = lambda x: x.reshape(b * h, t, x.shape[-1])
+    out = maclaurin_attention_pallas(
+        flat(q), flat(k), flat(v), scale=scale, chunk=min(chunk, t), interpret=_on_cpu()
+    )
+    return out.reshape(b, h, t, dv).astype(v.dtype)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for Maclaurin (second-order) linear attention.
+
+The paper's Eq 3.6 applied to attention: replace exp(u), u = q.k / sqrt(d),
+by w(u) = 1 + u + u^2/2. w is positive (min 1/2 at u = -1), so the
+normalizer is well-defined. Quadratic O(T^2) reference — the kernel must
+match it exactly (it is the same math, chunked).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def maclaurin_weights(u):
+    """Second-order Maclaurin surrogate of exp(u) (Eq 3.6/A.1)."""
+    return 1.0 + u + 0.5 * u * u
+
+
+def maclaurin_attention_ref(q, k, v, scale=None):
+    """Causal Maclaurin-attention. q,k: (..., T, d_k), v: (..., T, d_v)."""
+    d_k = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d_k))
+    T = q.shape[-2]
+    u = jnp.einsum("...td,...sd->...ts", q, k) * scale
+    w = maclaurin_weights(u)
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    w = jnp.where(causal, w, 0.0)
+    num = jnp.einsum("...ts,...sv->...tv", w, v)
+    den = jnp.sum(w, axis=-1)[..., None]
+    return num / den
+
+
+def softmax_attention_ref(q, k, v, scale=None):
+    """Exact softmax attention — the 'exact model' the approximation targets."""
+    d_k = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d_k))
+    T = q.shape[-2]
+    u = jnp.einsum("...td,...sd->...ts", q, k) * scale
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    u = jnp.where(causal, u, -jnp.inf)
+    w = jnp.exp(u - jnp.max(u, axis=-1, keepdims=True))
+    w = jnp.where(causal, w, 0.0)
+    return jnp.einsum("...ts,...sv->...tv", w, v) / jnp.sum(w, axis=-1)[..., None]

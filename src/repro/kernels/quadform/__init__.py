@@ -1,0 +1,4 @@
+from repro.kernels.quadform.ops import quadform_predict
+from repro.kernels.quadform.ref import quadform_predict_ref
+
+__all__ = ["quadform_predict", "quadform_predict_ref"]

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the quadratic-form prediction kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.quadform.kernel import quadform_predict_pallas
+from repro.kernels.quadform.ref import quadform_predict_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("c", "b", "gamma", "use_pallas", "block_n"))
+def quadform_predict(
+    Z, M, v, c: float, b: float, gamma: float,
+    use_pallas: bool = True, block_n: int = 512,
+):
+    """Returns (f_hat, z_sq). See kernel.py for the TPU mapping."""
+    if use_pallas:
+        return quadform_predict_pallas(
+            Z, M, v, c, b, gamma, block_n=block_n, interpret=_on_cpu()
+        )
+    return quadform_predict_ref(Z, M, v, c, b, gamma)

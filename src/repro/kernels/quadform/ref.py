@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the approximated-model prediction kernel (Eq 3.8)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quadform_predict_ref(Z, M, v, c, b, gamma):
+    """f_hat(Z) = exp(-gamma ||z||^2)(c + v^T z + z^T M z) + b.
+
+    Z: (n, d), M: (d, d), v: (d,). Returns (f_hat (n,), z_sq (n,)).
+    z_sq is exposed so callers can check the Eq 3.11 bound for free.
+    """
+    z_sq = jnp.sum(Z * Z, axis=-1)
+    g_hat = c + Z @ v + jnp.sum((Z @ M) * Z, axis=-1)
+    return jnp.exp(-gamma * z_sq) * g_hat + b, z_sq

@@ -1,0 +1,4 @@
+from repro.kernels.rbf_pred.ops import rbf_predict
+from repro.kernels.rbf_pred.ref import rbf_predict_ref
+
+__all__ = ["rbf_predict", "rbf_predict_ref"]

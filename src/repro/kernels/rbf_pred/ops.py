@@ -1,0 +1,39 @@
+"""Jit'd public wrapper for the exact-RBF prediction kernel.
+
+On CPU (this container) the Pallas body runs in interpret mode; on TPU the
+same BlockSpecs compile natively. ``use_pallas=False`` falls back to the
+jnp oracle (what XLA fuses on its own) — the Table-2 benchmark compares
+both.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rbf_pred.kernel import rbf_predict_pallas
+from repro.kernels.rbf_pred.ref import rbf_predict_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("gamma", "b", "use_pallas", "block_n", "block_m"))
+def rbf_predict(
+    Z,
+    X,
+    alpha_y,
+    gamma: float,
+    b: float,
+    use_pallas: bool = True,
+    block_n: int = 256,
+    block_m: int = 256,
+):
+    if use_pallas:
+        return rbf_predict_pallas(
+            Z, X, alpha_y, gamma, b,
+            block_n=block_n, block_m=block_m, interpret=_on_cpu(),
+        )
+    return rbf_predict_ref(Z, X, alpha_y, gamma, b)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the exact RBF prediction kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_predict_ref(Z, X, alpha_y, gamma, b):
+    """f(Z) = sum_i alpha_y_i exp(-gamma ||x_i - z||^2) + b.
+
+    Z: (n, d), X: (m, d), alpha_y: (m,), gamma/b scalars. Returns (n,).
+    """
+    z_sq = jnp.sum(Z * Z, axis=-1)[:, None]
+    x_sq = jnp.sum(X * X, axis=-1)[None, :]
+    d2 = jnp.maximum(z_sq + x_sq - 2.0 * (Z @ X.T), 0.0)
+    return jnp.exp(-gamma * d2) @ alpha_y + b

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first import in the process (XLA locks the device count on
+first jax init) — hence the os.environ lines above everything else.
+
+Per cell, records to results/dryrun/<arch>__<shape>__<mesh>.json:
+  * memory_analysis()   — per-device argument/output/temp bytes (fits check)
+  * cost_analysis()     — per-device HLO FLOPs + bytes accessed
+  * collective ops      — parsed from the post-SPMD HLO text: op kind,
+    result shape bytes, replica-group size (for link-traffic modelling)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 x 2 cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --multi-pod
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.sharding.partitioning import (
+    DEFAULT_RULES, DP_ONLY_RULES, EP_DATA_RULES, EP_DP_RULES, SP_RULES,
+    TP_ONLY_RULES,
+)
+
+RESULTS_DIR = "results/dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TUPLE_COLL_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """Extract collective ops: kind, per-device result bytes, group size."""
+    out = []
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue  # async pairs: count the -start only
+        m = _COLL_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            nbytes = _shape_bytes(dtype, dims)
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if not mt:
+                continue
+            parts, kind = mt.groups()
+            nbytes = 0
+            for p in re.finditer(r"([a-z0-9]+)\[([\d,]*)\]", parts):
+                nbytes += _shape_bytes(*p.groups())
+        gm = _GROUPS_RE.search(line)
+        group_size = int(gm.group(2)) if gm else None
+        out.append({"kind": kind, "bytes": nbytes, "group_size": group_size})
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, rules_name: str = "auto",
+             force: bool = False, reanalyze: bool = False,
+             microbatches: int | None = None, backend: str | None = None,
+             scores_bf16: bool = False, kv_int8: bool = False) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    if rules_name != "auto":
+        tag += f"__{rules_name}"
+    if microbatches is not None:
+        tag += f"__mb{microbatches}"
+    if backend:
+        tag += f"__{backend}"
+    if scores_bf16:
+        tag += "__sbf16"
+    if kv_int8:
+        tag += "__kvint8"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, tag + ".json")
+    hlo_path = os.path.join(RESULTS_DIR, tag + ".hlo.gz")
+    if os.path.exists(path) and not (force or reanalyze):
+        with open(path) as f:
+            return json.load(f)
+    if reanalyze and os.path.exists(path) and os.path.exists(hlo_path):
+        # recompute the cost model from the stored HLO — no recompile
+        import gzip
+
+        with open(path) as f:
+            result = json.load(f)
+        with gzip.open(hlo_path, "rt") as f:
+            text = f.read()
+        result = _attach_costs(result, text, keep_xla=True)
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+        return result
+
+    cfg = ARCHS[arch]
+    if backend:
+        cfg = cfg.with_backend(backend)
+    if scores_bf16:
+        import dataclasses as _dc2
+
+        cfg = _dc2.replace(cfg, attn_scores_dtype="bfloat16")
+    if kv_int8:
+        import dataclasses as _dc3
+
+        cfg = _dc3.replace(cfg, kv_cache_dtype="int8")
+    shape = SHAPES[shape_name]
+    rules = {
+        "auto": None,
+        "default": DEFAULT_RULES,
+        "tp_only": TP_ONLY_RULES,
+        "dp_only": DP_ONLY_RULES,
+        "ep_data": EP_DATA_RULES,
+        "ep_dp": EP_DP_RULES,
+        "sp": SP_RULES,
+    }[rules_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    ocfg = None
+    if microbatches is not None:
+        from repro.launch.specs import choose_optimizer
+        import dataclasses as _dc
+
+        ocfg = _dc.replace(choose_optimizer(cfg, shape), microbatches=microbatches)
+    cell = build_cell(cfg, shape, mesh, rules, ocfg=ocfg)
+    from repro.sharding.hints import use_hints
+    from repro.launch.specs import choose_rules
+
+    active_rules = choose_rules(cell_cfg_for_rules(cfg, shape), shape, rules)
+    with mesh, use_hints(mesh, active_rules):
+        jitted = jax.jit(
+            cell.step_fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        text = compiled.as_text()
+    import gzip
+
+    with gzip.open(hlo_path, "wt") as f:
+        f.write(text)
+    result = {
+        **cell.meta,
+        "mesh": mesh_name,
+        "rules": rules_name,
+        "n_devices": mesh.size,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_device_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "xla_cost": {
+            "flops_body_once": ca.get("flops", 0.0) if ca else 0.0,
+            "bytes_body_once": ca.get("bytes accessed", 0.0) if ca else 0.0,
+        },
+    }
+    result = _attach_costs(result, text)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def cell_cfg_for_rules(cfg, shape):
+    from repro.launch.specs import pick_backend
+
+    return pick_backend(cfg, shape)
+
+
+def _attach_costs(result: dict, text: str, keep_xla: bool = False) -> dict:
+    """Trip-count-aware cost model (XLA's cost_analysis counts while bodies
+    once — ~60x off for scanned stacks; see launch/hlo_cost.py)."""
+    from repro.launch.hlo_cost import analyze_text
+
+    hc = analyze_text(text)
+    result["cost"] = {
+        "flops": hc["flops"],
+        "bytes_accessed": hc["bytes_accessed"],
+    }
+    result["collectives"] = hc["collectives"]
+    result["collective_ops"] = hc["collective_ops"]
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--rules", default="auto",
+                    choices=["auto", "default", "tp_only", "dp_only", "ep_data", "ep_dp", "sp"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute costs from stored HLO, no recompile")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--backend", default=None, choices=[None, "maclaurin", "softmax"])
+    ap.add_argument("--scores-bf16", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                label = f"{arch:24s} {shape:12s} {'2x16x16' if mp else '16x16':8s}"
+                try:
+                    r = run_cell(arch, shape, mp, args.rules, args.force, args.reanalyze,
+                                 args.microbatches, args.backend, args.scores_bf16,
+                                 args.kv_int8)
+                    mem_gb = r["memory"]["peak_device_bytes"] / 2**30
+                    print(
+                        f"OK   {label} flops/dev={r['cost']['flops']:.3e} "
+                        f"mem/dev={mem_gb:.2f}GiB colls={sum(v['count'] for v in r['collectives'].values())} "
+                        f"({r['compile_seconds']}s)",
+                        flush=True,
+                    )
+                    n_ok += 1
+                except Exception:
+                    print(f"FAIL {label}", flush=True)
+                    traceback.print_exc()
+                    n_fail += 1
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

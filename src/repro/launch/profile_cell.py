@@ -1,0 +1,91 @@
+"""Per-cell HLO profile: where the flops/bytes/collective terms come from.
+
+    PYTHONPATH=src python -m repro.launch.profile_cell <cell-tag>
+
+Reads results/dryrun/<tag>.hlo.gz and prints the top contributors by op kind
+and by tensor shape, trip-count weighted — the 'profiler' of the dry-run
+perf loop (there is no wall-clock on this container; this is the structural
+profile the §Perf methodology iterates on).
+"""
+
+from __future__ import annotations
+
+import gzip
+import sys
+from collections import defaultdict
+
+from repro.launch.hlo_cost import (
+    CostModel, _CALLS_RE, _COND_RE, _TRIP_RE, _COLLECTIVES, _MATERIALIZING,
+    _first_shapes, _shape_elems,
+)
+
+
+def profile(text: str):
+    cm = CostModel(text)
+    flops_by = defaultdict(float)
+    bytes_by = defaultdict(float)
+    bytes_by_shape = defaultdict(float)
+    flops_by_shape = defaultdict(float)
+    coll_by = defaultdict(float)
+
+    def walk(comp_name: str, mult: float, seen):
+        comp = cm.comps.get(comp_name)
+        if comp is None or comp_name in seen:
+            return
+        seen = seen | {comp_name}
+        for op in comp.ops:
+            kind = op.kind.replace("-start", "")
+            if kind == "while":
+                tm = _TRIP_RE.search(op.rest)
+                trips = int(tm.group(1)) if tm else 1
+                body = _CALLS_RE.search(op.rest)
+                if body:
+                    walk(body.group(1), mult * trips, seen)
+                continue
+            if kind in ("call", "conditional"):
+                for ref in _CALLS_RE.findall(op.rest):
+                    walk(ref, mult, seen)
+                continue
+            if kind == "fusion":
+                body = _CALLS_RE.search(op.rest)
+                if body:
+                    walk(body.group(1), mult, seen)
+                continue
+            if kind == "dot":
+                f = cm._dot_flops(op) * mult
+                flops_by["dot"] += f
+                flops_by_shape[op.result_type.split("{")[0]] += f
+            if kind in _COLLECTIVES:
+                c = cm._collective(op)
+                coll_by[f"{kind} g={c['group_size']}"] += c["bytes"] * mult
+            if kind in _MATERIALIZING:
+                b = cm._op_bytes(op) * mult
+                bytes_by[kind] += b
+                bytes_by_shape[op.result_type.split("{")[0]] += b
+
+    walk(cm.entry, 1.0, frozenset())
+    return flops_by, bytes_by, bytes_by_shape, flops_by_shape, coll_by
+
+
+def main():
+    tag = sys.argv[1]
+    with gzip.open(f"results/dryrun/{tag}.hlo.gz", "rt") as f:
+        text = f.read()
+    fb, bb, bbs, fbs, cb = profile(text)
+    print(f"== {tag}")
+    print("-- bytes by op kind (GB):")
+    for k, v in sorted(bb.items(), key=lambda kv: -kv[1])[:8]:
+        print(f"   {k:24s} {v/1e9:10.2f}")
+    print("-- bytes by result shape (GB):")
+    for k, v in sorted(bbs.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"   {k:44s} {v/1e9:10.2f}")
+    print("-- dot flops by result shape (GFLOP):")
+    for k, v in sorted(fbs.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"   {k:44s} {v/1e9:10.2f}")
+    print("-- collective bytes by kind/group (GB):")
+    for k, v in sorted(cb.items(), key=lambda kv: -kv[1])[:8]:
+        print(f"   {k:24s} {v/1e9:10.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,316 @@
+"""ShapeDtypeStruct input specs + sharding assembly for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns (args, in_shardings, step_fn, out_shardings)
+builders used by launch/dryrun.py — no device allocation anywhere
+(everything is jax.eval_shape + NamedSharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import cache_spec, init_cache, init_params
+from repro.serve.decode_step import make_prefill_step, make_serve_step
+from repro.sharding.partitioning import (
+    AxisRules,
+    DEFAULT_RULES,
+    batch_pspec,
+    param_shardings,
+    spec_to_pspec,
+    _is_spec_leaf,
+)
+from repro.train.train_step import OptimizerConfig, init_opt_state, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ----------------------------------------------------------------- helpers
+
+
+def pick_backend(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """long_500k: substitute the paper's Maclaurin attention for every arch
+    that has attention (full softmax at 500k would be quadratic — DESIGN.md
+    §7); rwkv6 runs its native O(d) recurrence."""
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return cfg.with_backend("maclaurin")
+    return cfg
+
+
+def choose_optimizer(cfg: ModelConfig, shape: ShapeConfig | None = None,
+                     dp_ways: int = 16) -> OptimizerConfig:
+    """Adafactor for the 480B-class (HBM napkin math in DESIGN.md §6) and
+    enough gradient-accumulation microbatches that the per-layer activation
+    stash fits the 16 GB v5e budget.
+
+    Stash estimate (remat saves the residual stream per scanned layer):
+        L x (global_tokens / data_ways) x d_model x 2 bytes
+    target <= ~5 GB/device => microbatches = next_pow2(stash / 5GB).
+    """
+    name = "adafactor" if cfg.param_count() > 100e9 else "adamw"
+    mb = 1
+    if shape is not None and shape.kind == "train":
+        local_tokens = shape.global_batch * shape.seq_len / dp_ways
+        stash = cfg.n_layers * local_tokens * cfg.d_model * 2
+        target = 5e9
+        # per-microbatch batch must stay divisible by the dp axes, or GSPMD
+        # replicates it (measured 162 GiB/dev on llama-vision before this)
+        mb_cap = max(1, shape.global_batch // dp_ways)
+        while mb < mb_cap and stash / mb > target:
+            mb *= 2
+    return OptimizerConfig(name=name, microbatches=mb)
+
+
+def choose_rules(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules | None) -> AxisRules:
+    """Auto rule selection (tuned by the §Perf hillclimb; overridable):
+
+    train, small (<1B)  -> DP_ONLY: replicate weights, batch over the whole
+                           mesh. Models this size can't divide the model
+                           axis (9 heads vs 16) — TP left attention sharded
+                           only 16/256 ways (measured 16x roofline-fraction
+                           win on smollm train_4k).
+    train, MoE          -> EP_DATA: experts fully sharded (experts x data,
+                           expert-ffn x model), tokens all-to-all; removes
+                           per-layer-per-microbatch expert-weight gathers
+                           (measured -34% collective on arctic train_4k).
+    train, dense        -> DEFAULT (TP + FSDP/ZeRO-3 over data).
+    serve               -> TP_ONLY when bf16 weights fit per-device under
+                           pure TP (no optimizer state at inference, so
+                           FSDP's per-layer all-gathers are pure overhead —
+                           measured 85x collective-term win on yi-34b
+                           decode_32k); DEFAULT (2D weights) for the 100B+
+                           models where TP alone cannot hold the weights.
+    """
+    from repro.sharding.partitioning import (
+        DP_ONLY_RULES, EP_DATA_RULES, TP_ONLY_RULES,
+    )
+
+    if rules is not None:
+        return rules
+    if shape.kind == "train":
+        if cfg.param_count() <= 1e9 and cfg.family in ("dense", "audio"):
+            return DP_ONLY_RULES
+        # EP-over-data pays only when expert weights dwarf the tokens being
+        # moved (arctic: 35M-element experts -> -34% collective; qwen3's
+        # 1.6M-element experts measured WORSE under it, see §Perf)
+        if cfg.moe_num_experts and cfg.moe_d_ff * cfg.d_model >= 10e6:
+            return EP_DATA_RULES
+        return DEFAULT_RULES
+    # serving holds bf16 weights (2 bytes) — budget ~10 GB of the 16 GB HBM
+    # for TP-resident weights before falling back to 2D sharding
+    tp_bytes = cfg.param_count() * 2 / 16
+    return TP_ONLY_RULES if tp_bytes <= 10e9 else DEFAULT_RULES
+
+
+def sanitize(sharding_tree, shape_tree, mesh: Mesh):
+    """Drop sharding on any dim not divisible by its mesh extent (GSPMD would
+    pad; explicit in_shardings must divide evenly)."""
+
+    def fix(sh: NamedSharding, sds):
+        spec = list(sh.spec) + [None] * (len(sds.shape) - len(sh.spec))
+        out = []
+        for dim, s in zip(sds.shape, spec):
+            if s is None:
+                out.append(None)
+                continue
+            axes = (s,) if isinstance(s, str) else tuple(s)
+            extent = math.prod(mesh.shape[a] for a in axes)
+            out.append(s if dim % extent == 0 else None)
+        return NamedSharding(mesh, PartitionSpec(*out))
+
+    return jax.tree.map(fix, sharding_tree, shape_tree)
+
+
+def _opt_spec_tree(ocfg: OptimizerConfig, param_spec, param_sds):
+    """Logical spec tree for the optimizer state, mirroring init_opt_state."""
+    scalar = ()
+    if ocfg.name == "adafactor":
+        def leaf(s, p):
+            s = tuple(s) + (None,) * (len(p.shape) - len(s))
+            if len(p.shape) >= 2:
+                return {"vr": s[:-1], "vc": s[:-2] + s[-1:]}
+            return {"v": s}
+
+        v = jax.tree.map(leaf, param_spec, param_sds, is_leaf=_is_spec_leaf)
+        state = {"v": v, "count": scalar}
+    else:
+        state = {"m": param_spec, "v": param_spec, "count": scalar}
+    if ocfg.compress_grads:
+        state["ef"] = param_spec
+    return state
+
+
+# ----------------------------------------------------------------- cell spec
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything dryrun needs to lower one (arch x shape) cell."""
+
+    step_fn: Any
+    args: tuple            # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+    donate_argnums: tuple = ()
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    rules: AxisRules | None = None,
+    ocfg: OptimizerConfig | None = None,
+) -> CellSpec:
+    cfg = pick_backend(cfg, shape)
+    rules = choose_rules(cfg, shape, rules)
+    dp_ways = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    ocfg = ocfg or choose_optimizer(cfg, shape, dp_ways=dp_ways)
+    key = jax.random.PRNGKey(0)
+
+    # eval_shape can't return the (string-leaved) spec tree; capture it via
+    # closure side-channel — the tracer runs the builder exactly once.
+    spec_box = {}
+
+    def _build(k):
+        p, s = init_params(cfg, k)
+        spec_box["spec"] = s
+        return p
+
+    params_sds = jax.eval_shape(_build, key)
+    spec = spec_box["spec"]
+    if shape.kind != "train":
+        # serving weights are bf16-resident (the model casts to cfg.dtype
+        # internally anyway; f32 masters live only in the training job)
+        params_sds = jax.tree.map(
+            lambda s: SDS(s.shape, jnp.bfloat16)
+            if jnp.issubdtype(s.dtype, jnp.floating) else s,
+            params_sds,
+        )
+    p_sh = sanitize(param_shardings(spec, rules, mesh), params_sds, mesh)
+    bspec = batch_pspec(mesh, rules)
+    GB, T = shape.global_batch, shape.seq_len
+    data_ways = math.prod(
+        mesh.shape[a]
+        for a in (bspec[0] if isinstance(bspec[0], tuple) else (bspec[0],))
+        if a is not None
+    )
+    bsh = NamedSharding(mesh, bspec if GB % max(data_ways, 1) == 0 else PartitionSpec(None))
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    vlm = cfg.family == "vlm"
+    img_sds = (
+        SDS((GB, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16) if vlm else None
+    )
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(lambda p: init_opt_state(ocfg, p), params_sds)
+        o_spec = _opt_spec_tree(ocfg, spec, params_sds)
+        o_sh = sanitize(
+            jax.tree.map(
+                lambda s: NamedSharding(mesh, spec_to_pspec(s, rules, mesh)),
+                o_spec,
+                is_leaf=_is_spec_leaf,
+            ),
+            opt_sds,
+            mesh,
+        )
+        batch = {
+            "tokens": SDS((GB, T), jnp.int32),
+            "labels": SDS((GB, T), jnp.int32),
+        }
+        b_sh = {"tokens": bsh, "labels": bsh}
+        if vlm:
+            batch["image_embeds"] = img_sds
+            b_sh["image_embeds"] = bsh
+        step_fn = make_train_step(cfg, ocfg)
+        args = (params_sds, opt_sds, batch, SDS((), jnp.int32))
+        in_sh = (p_sh, o_sh, b_sh, repl)
+        out_sh = (p_sh, o_sh, None)
+        donate = (0, 1)  # params + opt state are consumed
+        meta = {"kind": "train", "optimizer": ocfg.name}
+    elif shape.kind == "prefill":
+        step_fn = make_prefill_step(cfg)
+        if vlm:
+            args = (params_sds, SDS((GB, T), jnp.int32), img_sds)
+            in_sh = (p_sh, bsh, bsh)
+        else:
+            args = (params_sds, SDS((GB, T), jnp.int32))
+            in_sh = (p_sh, bsh)
+        out_sh = None
+        donate = ()
+        meta = {"kind": "prefill"}
+    else:  # decode
+        cache_sds = jax.eval_shape(
+            lambda p, img: init_cache(cfg, GB, T, image_embeds=img, params=p),
+            params_sds,
+            img_sds,
+        )
+        c_spec = cache_spec(cfg)
+        c_sh = sanitize(
+            jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh,
+                    spec_to_pspec(
+                        tuple("batch" if a == "batch" else a for a in s), rules, mesh
+                    ),
+                ),
+                c_spec,
+                is_leaf=_is_spec_leaf,
+            ),
+            cache_sds,
+            mesh,
+        )
+        # batch=1 cells: replicate the cache batch dim along with the batch
+        if GB % max(data_ways, 1) != 0:
+            c_sh = jax.tree.map(
+                lambda sh: NamedSharding(
+                    mesh,
+                    PartitionSpec(*[
+                        None if (i == 1) else s for i, s in enumerate(sh.spec)
+                    ]),
+                ),
+                c_sh,
+            )
+        # KV caches whose kv-head dim doesn't divide the model axis fall
+        # back to SEQUENCE-sharded storage (S % model == 0 always at 32k):
+        # the decode softmax/value-sum then runs as sharded partial
+        # reductions + a tiny cross-shard combine (GSPMD inserts them).
+        model_ways = mesh.shape.get("model", 1)
+
+        def _seq_shard(sh: NamedSharding, sds):
+            if (
+                len(sds.shape) == 5
+                and sds.shape[2] == T
+                and sds.shape[3] % model_ways != 0
+                and T % model_ways == 0
+            ):
+                spec = list(sh.spec) + [None] * (5 - len(sh.spec))
+                if spec[3] in (None, "model") and spec[2] is None:
+                    spec[2], spec[3] = "model", None
+                    return NamedSharding(mesh, PartitionSpec(*spec))
+            return sh
+
+        c_sh = jax.tree.map(_seq_shard, c_sh, cache_sds)
+        step_fn = make_serve_step(cfg)
+        if vlm:
+            args = (params_sds, SDS((GB, 1), jnp.int32), SDS((), jnp.int32), cache_sds, img_sds)
+            in_sh = (p_sh, bsh, repl, c_sh, bsh)
+        else:
+            args = (params_sds, SDS((GB, 1), jnp.int32), SDS((), jnp.int32), cache_sds)
+            in_sh = (p_sh, bsh, repl, c_sh)
+        out_sh = (None, c_sh)
+        donate = (3,)  # in-place KV-cache / state update
+        meta = {"kind": "decode", "backend": cfg.attention_backend}
+    meta.update(
+        arch=cfg.name, shape=shape.name, family=cfg.family,
+        params=cfg.param_count(), active_params=cfg.active_param_count(),
+        seq_len=T, global_batch=GB,
+    )
+    return CellSpec(step_fn, args, in_sh, out_sh, meta, donate)

@@ -1,0 +1,97 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 --batch 8 --seq 256 --reduced --ckpt-dir /tmp/ckpt
+
+Wires together: config -> init (or restore) -> sharded train_step ->
+step-resumable data pipeline -> async checkpointing -> watchdog. On real
+hardware the same script runs under multi-host jax.distributed; on this
+container it runs single-device (meshless) or on a fake mesh for tests.
+
+Fault-tolerance drill (--simulate-failure N): the process "loses a node" at
+step N — the launcher saves nothing special, exits, and a restart with the
+same flags resumes from the last committed async checkpoint, replaying the
+data stream from the restored step. See examples/elastic_restart.py for the
+remesh-on-shrink variant.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.loader import lm_token_batches
+from repro.models.transformer import init_params
+from repro.train import checkpoint as ckpt
+from repro.train.train_step import OptimizerConfig, init_opt_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--simulate-failure", type=int, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    ocfg = OptimizerConfig(
+        peak_lr=args.lr, warmup=max(5, args.steps // 20), total_steps=args.steps,
+        microbatches=args.microbatches, compress_grads=args.compress_grads,
+    )
+
+    start_step = 0
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = init_opt_state(ocfg, params)
+    saver = ckpt.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.ckpt_dir and (last := ckpt.latest_step(args.ckpt_dir)) is not None:
+        state = ckpt.restore(args.ckpt_dir, last, {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        start_step = last + 1
+        print(f"[train] resumed from step {last}", flush=True)
+
+    step_fn = jax.jit(make_train_step(cfg, ocfg), donate_argnums=(0, 1))
+    make_batch = lm_token_batches(cfg.vocab_size, args.batch, args.seq, seed=42)
+
+    t_last, tok_per_step = time.time(), args.batch * args.seq
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in make_batch(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch, jnp.int32(step))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            dt = time.time() - t_last
+            t_last = time.time()
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({args.log_every * tok_per_step / max(dt, 1e-9):.0f} tok/s)",
+                  flush=True)
+        if saver and step > 0 and step % args.ckpt_every == 0:
+            saver.save(step, {"params": params, "opt": opt_state})
+        if args.simulate_failure is not None and step == args.simulate_failure:
+            print(f"[train] SIMULATED NODE FAILURE at step {step} — dying "
+                  f"uncleanly (restart me to resume)", flush=True)
+            sys.exit(42)
+    if saver:
+        saver.save(args.steps - 1, {"params": params, "opt": opt_state})
+        saver.wait()
+    print("[train] done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

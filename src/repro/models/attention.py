@@ -1,0 +1,238 @@
+"""GQA attention: training (full causal), prefill, and cached decode.
+
+Head layout convention: activations (B, T, H, hd) with H ("heads"/"kv_heads")
+as the model-sharded logical axis — the Megatron TP pattern (shard heads,
+all-reduce after the output projection, which GSPMD inserts from the
+shardings of w_o).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, apply_rope
+
+Array = jax.Array
+
+
+def attention_params(key, d: int, n_heads: int, n_kv: int, head_dim: int, qkv_bias: bool):
+    ks = jax.random.split(key, 4)
+    params = {
+        "w_q": _init(ks[0], (d, n_heads * head_dim)),
+        "w_k": _init(ks[1], (d, n_kv * head_dim)),
+        "w_v": _init(ks[2], (d, n_kv * head_dim)),
+        "w_o": _init(ks[3], (n_heads * head_dim, d), scale=1.0 / ((n_heads * head_dim) ** 0.5)),
+    }
+    spec = {
+        "w_q": ("embed", "heads"),
+        "w_k": ("embed", "kv_heads"),
+        "w_v": ("embed", "kv_heads"),
+        "w_o": ("heads", "embed"),
+    }
+    if qkv_bias:
+        params |= {
+            "b_q": jnp.zeros((n_heads * head_dim,), jnp.float32),
+            "b_k": jnp.zeros((n_kv * head_dim,), jnp.float32),
+            "b_v": jnp.zeros((n_kv * head_dim,), jnp.float32),
+        }
+        spec |= {"b_q": ("heads",), "b_k": ("kv_heads",), "b_v": ("kv_heads",)}
+    return params, spec
+
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta):
+    B, T, _ = x.shape
+    q = x @ params["w_q"]
+    k = x @ params["w_k"]
+    v = x @ params["w_v"]
+    if "b_q" in params:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = q.reshape(B, T, n_heads, head_dim)
+    k = k.reshape(B, T, n_kv, head_dim)
+    v = v.reshape(B, T, n_kv, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _gqa_scores_full(q, k, v, causal: bool, chunk: int = 512,
+                     scores_dtype=jnp.float32):
+    """q: (B,T,Hq,hd), k/v: (B,S,Hkv,hd). Softmax attention, BLOCKWISE over
+    query chunks (lax.scan) so the (T x S) score matrix never materializes —
+    peak extra memory is one (B,Hkv,g,chunk,S) slab, rematerialized in bwd
+    (each chunk body is jax.checkpoint'ed). Full-softmax rows per chunk (S is
+    not chunked), so no online-softmax state is needed.
+    """
+    B, T, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = 1.0 / (hd**0.5)
+    qh = q.reshape(B, T, Hkv, g, hd)
+
+    if T <= chunk:
+        return _attn_chunk(qh, k, v, 0, causal, scale, T, scores_dtype).reshape(
+            B, T, Hq, hd
+        )
+
+    n_chunks = T // chunk
+    assert n_chunks * chunk == T, f"T={T} not divisible by attention chunk {chunk}"
+    q_c = qh.reshape(B, n_chunks, chunk, Hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    @jax.checkpoint
+    def body(offset, qc):
+        out = _attn_chunk(qc, k, v, offset, causal, scale, T, scores_dtype)
+        return offset + chunk, out
+
+    _, outs = jax.lax.scan(body, jnp.int32(0), q_c)       # (n_chunks, B, c, Hkv, g, hd)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, Hq, hd)
+    return out
+
+
+def _attn_chunk(qc, k, v, offset, causal: bool, scale: float, T: int,
+                scores_dtype=jnp.float32):
+    """One query chunk against the full key set. qc: (B,c,Hkv,g,hd).
+
+    scores_dtype=bf16 halves the dominant HBM slab; max is exact in bf16,
+    exp is elementwise, and the normalizer still accumulates in f32 (the
+    convert fuses into the reduction — the slab itself stays bf16)."""
+    c = qc.shape[1]
+    S = k.shape[1]
+    # accumulate via preferred_element_type — NOT by converting the inputs
+    # (XLA would hoist the convert over the whole K tensor/cache).
+    u = jnp.einsum(
+        "bthgd,bshd->bhgts", qc, k, preferred_element_type=scores_dtype
+    ) * scale
+    if causal:
+        rows = offset + jnp.arange(c)[:, None] + (S - T)   # global query positions
+        cols = jnp.arange(S)[None, :]
+        u = jnp.where(rows >= cols, u, jnp.asarray(-jnp.inf, u.dtype))
+    m = jnp.max(u, axis=-1, keepdims=True)
+    e = jnp.exp(u - m)
+    den = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+    w = (e / den.astype(e.dtype)).astype(qc.dtype)
+    return jnp.einsum("bhgts,bshd->bthgd", w, v)
+
+
+def self_attention(
+    params, x, *, n_heads, n_kv, head_dim, positions, rope_theta=10000.0,
+    causal=True, scores_dtype=jnp.float32
+):
+    """Training/prefill path: full attention over the sequence."""
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta)
+    out = _gqa_scores_full(q, k, v, causal, scores_dtype=scores_dtype)
+    B, T = x.shape[:2]
+    return out.reshape(B, T, n_heads * head_dim) @ params["w_o"]
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stacked KV cache: k/v (L, B, S, Hkv, hd), pos scalar int32."""
+
+    k: Array
+    v: Array
+
+
+def decode_attention(
+    params, x, cache_k, cache_v, pos, *, n_heads, n_kv, head_dim, rope_theta=10000.0
+):
+    """One-token cached decode. x: (B, 1, d); cache_k/v: (B, S, Hkv, hd).
+
+    Returns (out (B,1,d), new_k, new_v). Reads the FULL cache (the memory-
+    bound op the roofline sees) and writes one slot.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    S = cache_k.shape[1]
+    Hkv = cache_k.shape[2]
+    g = n_heads // Hkv
+    qh = q.reshape(B, 1, Hkv, g, head_dim)
+    scale = 1.0 / (head_dim**0.5)
+    u = jnp.einsum(
+        "bthgd,bshd->bhgts", qh, cache_k, preferred_element_type=jnp.float32
+    ) * scale
+    valid = (jnp.arange(S) <= pos)[None, None, None, None, :]
+    u = jnp.where(valid, u, -jnp.inf)
+    w = jax.nn.softmax(u, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", w, cache_v.astype(q.dtype))
+    out = out.reshape(B, 1, n_heads * head_dim) @ params["w_o"]
+    return out, cache_k, cache_v
+
+
+def decode_attention_quant(
+    params, x, cache_k, cache_v, k_scale, v_scale, pos,
+    *, n_heads, n_kv, head_dim, rope_theta=10000.0
+):
+    """Cached decode with an INT8 KV cache (per-token-per-head symmetric
+    scales — the KIVI/KVQuant family). Exactly equivalent math:
+
+        q.k = (q . k_int8) * scale_s          (scale factored out of the dot)
+        sum_s w_ts v_s = sum_s (w_ts * vscale_s) v_int8_s
+
+    Halves cache HBM traffic AND capacity vs bf16 (the decode roofline
+    lever identified in EXPERIMENTS.md §Roofline notes)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta)
+
+    def quantize(t):  # (B, 1, Hkv, hd) -> int8 + (B, 1, Hkv, 1) scale
+        s = jnp.max(jnp.abs(t), axis=-1, keepdims=True) / 127.0 + 1e-9
+        return jnp.clip(jnp.round(t / s), -127, 127).astype(jnp.int8), s
+
+    kq, ks = quantize(k)
+    vq, vs = quantize(v)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, kq, (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, vq, (0, pos, 0, 0))
+    k_scale = jax.lax.dynamic_update_slice(k_scale, ks.astype(k_scale.dtype), (0, pos, 0, 0))
+    v_scale = jax.lax.dynamic_update_slice(v_scale, vs.astype(v_scale.dtype), (0, pos, 0, 0))
+
+    S, Hkv = cache_k.shape[1], cache_k.shape[2]
+    g = n_heads // Hkv
+    qh = q.reshape(B, 1, Hkv, g, head_dim)
+    scale = 1.0 / (head_dim**0.5)
+    u = jnp.einsum(
+        "bthgd,bshd->bhgts", qh, cache_k.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    u = u * k_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, None, None, :]
+    valid = (jnp.arange(S) <= pos)[None, None, None, None, :]
+    u = jnp.where(valid, u, -jnp.inf)
+    w = jax.nn.softmax(u, axis=-1)
+    w = w * v_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum(
+        "bhgts,bshd->bthgd", w.astype(q.dtype), cache_v.astype(q.dtype)
+    )
+    out = out.reshape(B, 1, n_heads * head_dim) @ params["w_o"]
+    return out, cache_k, cache_v, k_scale, v_scale
+
+
+def cross_attention_params(key, d: int, n_heads: int, n_kv: int, head_dim: int):
+    ks = jax.random.split(key, 4)
+    params = {
+        "w_q": _init(ks[0], (d, n_heads * head_dim)),
+        "w_k": _init(ks[1], (d, n_kv * head_dim)),
+        "w_v": _init(ks[2], (d, n_kv * head_dim)),
+        "w_o": _init(ks[3], (n_heads * head_dim, d), scale=1.0 / ((n_heads * head_dim) ** 0.5)),
+    }
+    spec = {
+        "w_q": ("embed", "heads"),
+        "w_k": ("embed", "kv_heads"),
+        "w_v": ("embed", "kv_heads"),
+        "w_o": ("heads", "embed"),
+    }
+    return params, spec
+
+
+def cross_attention(params, x, ctx, *, n_heads, n_kv, head_dim):
+    """Queries from x (B,T,d), keys/values from ctx (B,N,d). No mask, no RoPE
+    (the Llama-3.2-vision convention for image cross-attention)."""
+    B, T, _ = x.shape
+    N = ctx.shape[1]
+    q = (x @ params["w_q"]).reshape(B, T, n_heads, head_dim)
+    k = (ctx @ params["w_k"]).reshape(B, N, n_kv, head_dim)
+    v = (ctx @ params["w_v"]).reshape(B, N, n_kv, head_dim)
+    out = _gqa_scores_full(q, k, v, causal=False)
+    return out.reshape(B, T, n_heads * head_dim) @ params["w_o"]

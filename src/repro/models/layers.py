@@ -1,0 +1,129 @@
+"""Shared transformer layer primitives: norms, RoPE, FFN, embeddings.
+
+All parameters are plain dict pytrees. Every creation helper returns
+(params, spec) where spec mirrors the params tree with logical-axis tuples
+used by repro.sharding.partitioning to derive NamedShardings. Logical axes:
+
+  "vocab"   — vocabulary dim (model-sharded)
+  "embed"   — d_model dim (replicated)
+  "heads"   — flattened attention head dim (model-sharded)
+  "kv_heads"— kv head dim (model-sharded)
+  "ffn"     — feed-forward hidden dim (model-sharded)
+  "experts" — MoE expert dim (model-sharded)
+  None      — replicated
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / (shape[0] ** 0.5)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ---------------------------------------------------------------- norms
+
+
+def rmsnorm_params(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed",)}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_frequencies(head_dim: int, max_pos: int, theta: float = 10000.0) -> Array:
+    """(max_pos, head_dim//2) complex-free cos/sin table; computed lazily."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    ang = jnp.outer(t, inv)  # (max_pos, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (B, T, H, hd); positions: (T,) or (B, T)."""
+    hd = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., T, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if cos.ndim == 2:  # (T, hd/2) -> broadcast over batch
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:  # (B, T, hd/2)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- FFN
+
+
+def swiglu_params(key, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_gate": _init(k1, (d, d_ff)),
+        "w_up": _init(k2, (d, d_ff)),
+        "w_down": _init(k3, (d_ff, d), scale=1.0 / (d_ff**0.5)),
+    }
+    spec = {
+        "w_gate": ("embed", "ffn"),
+        "w_up": ("embed", "ffn"),
+        "w_down": ("ffn", "embed"),
+    }
+    return params, spec
+
+
+def swiglu(params, x: Array) -> Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def embedding_params(key, vocab: int, d: int):
+    return (
+        {"table": _init(key, (vocab, d), scale=0.02)},
+        {"table": ("vocab", "embed")},
+    )
+
+
+def embed(params, tokens: Array) -> Array:
+    return params["table"][tokens]
+
+
+def unembed(params, x: Array) -> Array:
+    """Tied readout: logits over the (model-sharded) vocab axis."""
+    return x @ params["table"].T
+
+
+def lm_head_params(key, d: int, vocab: int):
+    return {"w": _init(key, (d, vocab), scale=0.02)}, {"w": ("embed", "vocab")}
+
+
+def lm_head(params, x: Array) -> Array:
+    return x @ params["w"]
+
+
+# ---------------------------------------------------------------- losses
+
+
+def softmax_xent(logits: Array, labels: Array) -> Array:
+    """Mean token cross-entropy; stable logsumexp; logits (B,T,V) f32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,186 @@
+"""Maclaurin linear attention as a drop-in decoder-attention backend.
+
+This is the paper's technique operating as attention (DESIGN.md §4):
+the KV set plays the support vectors, the query plays the test instance,
+and the running moment state (S0..S2) is the (c, v, M) quadratic form.
+Decode cost/state is O(d_k^2 d_v) per head — independent of context length,
+exactly as the paper's predictor is independent of n_sv.
+
+State layout per (batch, kv-head):
+    s1  (d_k, d_v)      sum_j k_j v_j^T          — the paper's  v = Xw
+    s2  (d_k^2, d_v)    sum_j phi2(k_j) v_j^T    — the paper's  M = XDX^T
+    k1  (d_k,)          sum_j k_j                |
+    k2  (d_k^2,)        sum_j phi2(k_j)          |- normalizer moments
+    n   ()              count                    |
+    v0  (d_v,)          sum_j v_j                — order-0 numerator
+
+The Eq 3.11 analogue: validity needs |q.k|/sqrt(d) < 1/2; we track
+max ||k||^2 in the state so serving can check  ||q||^2 max||k||^2 < d/4
+per query at no extra cost (`readout` returns the flag).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class MacState(NamedTuple):
+    s1: Array   # (..., d_k, d_v)
+    s2: Array   # (..., d_k*d_k, d_v)
+    k1: Array   # (..., d_k)
+    k2: Array   # (..., d_k*d_k)
+    n: Array    # (..., 1)
+    v0: Array   # (..., d_v)
+    max_k_sq: Array  # (..., 1)
+
+
+def init_state(batch_dims: tuple[int, ...], d_k: int, d_v: int, dtype=jnp.float32) -> MacState:
+    z = lambda *s: jnp.zeros(batch_dims + s, dtype)
+    return MacState(
+        s1=z(d_k, d_v), s2=z(d_k * d_k, d_v), k1=z(d_k), k2=z(d_k * d_k),
+        n=z(1), v0=z(d_v), max_k_sq=z(1),
+    )
+
+
+def _phi2(x: Array) -> Array:
+    """vec(x x^T) over the last axis: (..., d) -> (..., d*d)."""
+    d = x.shape[-1]
+    return (x[..., :, None] * x[..., None, :]).reshape(*x.shape[:-1], d * d)
+
+
+def extend_state(state: MacState, k: Array, v: Array) -> MacState:
+    """Absorb a block of tokens. k: (..., T, d_k), v: (..., T, d_v)."""
+    k2f = _phi2(k)
+    t = k.shape[-2]
+    return MacState(
+        s1=state.s1 + jnp.einsum("...td,...tv->...dv", k, v),
+        s2=state.s2 + jnp.einsum("...tp,...tv->...pv", k2f, v),
+        k1=state.k1 + jnp.sum(k, axis=-2),
+        k2=state.k2 + jnp.sum(k2f, axis=-2),
+        n=state.n + jnp.float32(t),
+        v0=state.v0 + jnp.sum(v, axis=-2),
+        max_k_sq=jnp.maximum(
+            state.max_k_sq, jnp.max(jnp.sum(k * k, axis=-1), axis=-1, keepdims=True)
+        ),
+    )
+
+
+def readout(state: MacState, q: Array, scale: float | None = None):
+    """Evaluate the quadratic form for queries q (..., T, d_k).
+
+    Returns (out (..., T, d_v), valid (..., T)) — `valid` is the Eq 3.11
+    analogue computed from ||q||^2 · max||k||^2 · scale^2 < 1/4.
+    """
+    d_k = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / float(d_k) ** 0.5
+    q2 = _phi2(q)
+    num = (
+        state.v0[..., None, :]
+        + scale * jnp.einsum("...td,...dv->...tv", q, state.s1)
+        + (0.5 * scale * scale) * jnp.einsum("...tp,...pv->...tv", q2, state.s2)
+    )
+    den = (
+        state.n
+        + scale * jnp.einsum("...td,...d->...t", q, state.k1)
+        + (0.5 * scale * scale) * jnp.einsum("...tp,...p->...t", q2, state.k2)
+    )
+    q_sq = jnp.sum(q * q, axis=-1)
+    valid = (scale * scale) * q_sq * state.max_k_sq < 0.25
+    return num / den[..., None], valid
+
+
+def maclaurin_attention_gqa(
+    q: Array, k: Array, v: Array, scale: float | None = None, use_kernel: bool = False
+):
+    """Full-sequence causal maclaurin attention with GQA head layout.
+
+    q: (B, T, Hq, hd), k/v: (B, T, Hkv, hd) -> (B, T, Hq, hd).
+
+    ``use_kernel=True`` routes through the chunked Pallas kernel (O(chunk*d^2)
+    working set — the production path); the default is the O(T^2)-scores jnp
+    form, identical math, used for tests and short prefills and safe to
+    lower under GSPMD.
+    """
+    B, T, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    # Expand kv heads to query heads (GQA) and move to (B, H, T, d).
+    kq = jnp.repeat(k, g, axis=2).transpose(0, 2, 1, 3)
+    vq = jnp.repeat(v, g, axis=2).transpose(0, 2, 1, 3)
+    qq = q.transpose(0, 2, 1, 3)
+    if use_kernel:
+        from repro.kernels.maclaurin_attn import maclaurin_attention
+
+        out = maclaurin_attention(qq, kq, vq, scale=scale)
+    elif T >= 1024:
+        # long sequences: chunked state form (GSPMD-shardable, O(c^2+d^2 dv))
+        out = maclaurin_attention_chunked(qq, kq, vq, scale=scale)
+    else:
+        from repro.kernels.maclaurin_attn.ref import maclaurin_attention_ref
+
+        out = maclaurin_attention_ref(qq, kq, vq, scale=scale)
+    return out.transpose(0, 2, 1, 3)
+
+
+def maclaurin_attention_chunked(
+    q: Array, k: Array, v: Array, scale: float | None = None, chunk: int = 256
+):
+    """Chunked causal Maclaurin attention in pure jnp (GSPMD-shardable).
+
+    Same math as the Pallas kernel (intra-chunk exact quadratic + inter-chunk
+    moment state), expressed with a lax.scan so it lowers under pjit for the
+    dry-run and long-context TRAINING. Working set per step:
+    O(chunk^2 + d_k^2 d_v) instead of O(T^2).
+
+    q,k,v: (B, H, T, d) -> (B, H, T, d_v).
+    """
+    B, H, T, d = q.shape
+    dv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    n_chunks = T // chunk
+    assert n_chunks * chunk == T, f"T={T} % chunk={chunk}"
+    rs = lambda t: t.reshape(B, H, n_chunks, chunk, -1).transpose(2, 0, 1, 3, 4)
+    q_c, k_c, v_c = rs(q), rs(k), rs(v)
+
+    def body(state, inp):
+        s1, s2, k1, k2, n, v0 = state
+        qc, kc, vc = inp                                  # (B,H,c,d)
+        u = scale * jnp.einsum("bhtd,bhsd->bhts", qc, kc)
+        w = 1.0 + u + 0.5 * u * u
+        tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+        w = jnp.where(tri, w, 0.0)
+        num = jnp.einsum("bhts,bhsv->bhtv", w, vc)
+        den = jnp.sum(w, axis=-1)
+        q2 = _phi2(qc)
+        num = num + v0[:, :, None, :]
+        num = num + scale * jnp.einsum("bhtd,bhdv->bhtv", qc, s1)
+        num = num + 0.5 * scale * scale * jnp.einsum("bhtp,bhpv->bhtv", q2, s2)
+        den = den + n[..., None]
+        den = den + scale * jnp.einsum("bhtd,bhd->bht", qc, k1)
+        den = den + 0.5 * scale * scale * jnp.einsum("bhtp,bhp->bht", q2, k2)
+        out = num / den[..., None]
+        k2f = _phi2(kc)
+        state = (
+            s1 + jnp.einsum("bhtd,bhtv->bhdv", kc, vc),
+            s2 + jnp.einsum("bhtp,bhtv->bhpv", k2f, vc),
+            k1 + jnp.sum(kc, axis=2),
+            k2 + jnp.sum(k2f, axis=2),
+            n + jnp.float32(chunk),
+            v0 + jnp.sum(vc, axis=2),
+        )
+        return state, out
+
+    z = lambda *s: jnp.zeros((B, H) + s, jnp.float32)
+    init = (z(d, dv), z(d * d, dv), z(d), z(d * d), z(1)[..., 0], z(dv))
+    qf, kf, vf = q_c.astype(jnp.float32), k_c.astype(jnp.float32), v_c.astype(jnp.float32)
+    _, outs = jax.lax.scan(body, init, (qf, kf, vf))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(B, H, T, dv).astype(v.dtype)

@@ -1,0 +1,187 @@
+"""RWKV6 ("Finch", arXiv:2404.05892) — attention-free, data-dependent decay.
+
+Time-mixing recurrence per head (K = V = head size):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t            S: (K, V)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w0 + lora(x_t))) in (0,1) per channel (the
+data-dependent decay that distinguishes RWKV6 from RWKV5), and u the
+current-token bonus.
+
+Chunked evaluation (GLA-style factorized decay): within a chunk, with
+lw = cumsum(log w) (lw <= 0), the decay from s to t factorizes
+exp(lw_t - lw_s) = exp(lw_t) * exp(-lw_s) per channel, so the intra-chunk
+contribution is a plain GEMM of transformed r/k. Exponents are clipped to
++-30 — the clipped terms are decayed to numerical zero anyway. Chunk of 32
+keeps the clip inactive for realistic decays.
+
+NOTE: the paper's technique (Maclaurin collapse of exp-of-inner-products)
+is INAPPLICABLE here — there is no exponential of an inner product; the
+recurrence is already O(d) per token. DESIGN.md §7 records this; rwkv6 is
+built without the technique.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init
+
+Array = jax.Array
+
+
+def rwkv6_params(key, d: int, d_ff: int, *, head_dim: int = 64, lora_r: int = 64):
+    n_heads = d // head_dim
+    ks = jax.random.split(key, 12)
+    params = {
+        "ln1": jnp.ones((d,), jnp.float32),  # pre-time-mix RMSNorm scale
+        "ln2": jnp.ones((d,), jnp.float32),  # pre-channel-mix RMSNorm scale
+        # time-mix lerp coefficients for r/k/v/w/g token shift
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "w_r": _init(ks[0], (d, d)),
+        "w_k": _init(ks[1], (d, d)),
+        "w_v": _init(ks[2], (d, d)),
+        "w_g": _init(ks[3], (d, d)),
+        # data-dependent decay: w = exp(-exp(w0 + (tanh(x Wa) Wb)))
+        "w0": -6.0 * jnp.ones((d,), jnp.float32) / 3.0,
+        "w_lora_a": _init(ks[4], (d, lora_r)),
+        "w_lora_b": _init(ks[5], (lora_r, d), scale=0.01),
+        "u": jnp.zeros((n_heads, head_dim), jnp.float32),
+        "ln_scale": jnp.ones((d,), jnp.float32),  # per-head group-norm scale
+        "w_o": _init(ks[6], (d, d), scale=1.0 / (d**0.5)),
+        # channel mixing
+        "mu_ffn": 0.5 * jnp.ones((2, d), jnp.float32),
+        "w_ffn_k": _init(ks[7], (d, d_ff)),
+        "w_ffn_v": _init(ks[8], (d_ff, d), scale=1.0 / (d_ff**0.5)),
+        "w_ffn_r": _init(ks[9], (d, d)),
+    }
+    spec = {
+        "ln1": ("embed",),
+        "ln2": ("embed",),
+        "mu": (None, "embed"),
+        "w_r": ("embed", "heads"),
+        "w_k": ("embed", "heads"),
+        "w_v": ("embed", "heads"),
+        "w_g": ("embed", "heads"),
+        "w0": ("heads",),
+        "w_lora_a": ("embed", None),
+        "w_lora_b": (None, "heads"),
+        "u": (None, None),
+        "ln_scale": ("heads",),
+        "w_o": ("heads", "embed"),
+        "mu_ffn": (None, "embed"),
+        "w_ffn_k": ("embed", "ffn"),
+        "w_ffn_v": ("ffn", "embed"),
+        "w_ffn_r": ("embed", "embed"),
+    }
+    return params, spec
+
+
+def _token_shift(x: Array, last: Array | None = None):
+    """x_{t-1}; for decode, `last` carries the previous token."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    return last
+
+
+def _group_norm(x: Array, scale: Array, n_heads: int, eps: float = 1e-5):
+    """Per-head LayerNorm of the wkv output (RWKV convention)."""
+    B, T, d = x.shape
+    xh = x.reshape(B, T, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    out = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (out.reshape(B, T, d) * scale).astype(x.dtype)
+
+
+def _decay(params, xw: Array) -> Array:
+    """log w in (-inf, 0): -exp(w0 + lora(x)), clipped away from 0."""
+    lora = jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    return -jnp.exp(params["w0"] + lora) - 1e-4
+
+
+def time_mix_forward(params, x: Array, *, head_dim: int = 64, chunk: int = 32):
+    """Training/prefill path. x: (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    H = d // head_dim
+    xs = _token_shift(x)
+    mix = lambda i: x + (xs - x) * params["mu"][i]
+    r = (mix(0) @ params["w_r"]).reshape(B, T, H, head_dim)
+    k = (mix(1) @ params["w_k"]).reshape(B, T, H, head_dim)
+    v = (mix(2) @ params["w_v"]).reshape(B, T, H, head_dim)
+    lw = _decay(params, mix(3)).reshape(B, T, H, head_dim)  # log w
+    g = jax.nn.silu(mix(4) @ params["w_g"])
+
+    n_chunks = T // chunk
+    assert n_chunks * chunk == T
+    cs = chunk
+    rs = lambda t: t.reshape(B, n_chunks, cs, H, head_dim).transpose(1, 0, 2, 3, 4)
+    r_c, k_c, v_c, lw_c = rs(r), rs(k), rs(v), rs(lw)
+    u = params["u"]
+
+    def scan_chunk(S, inputs):
+        rc, kc, vc, lwc = inputs                       # (B,Cs,H,K)
+        L = jnp.cumsum(lwc, axis=1)                    # inclusive cumsum of log w
+        # decay applied BETWEEN s and t (exclusive of s): exp(L_{t-1} - L_s)
+        # shift L for the query side: decay up to but excluding token t's own w.
+        Lq = jnp.concatenate([jnp.zeros_like(L[:, :1]), L[:, :-1]], axis=1)
+        r_t = rc * jnp.exp(jnp.clip(Lq, -30.0, 30.0))
+        k_s = kc * jnp.exp(jnp.clip(-L, -30.0, 30.0))
+        A = jnp.einsum("bthk,bshk->bhts", r_t, k_s)    # strict lower part valid
+        tri = jnp.tril(jnp.ones((cs, cs), dtype=bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        # current-token bonus u
+        diag = jnp.einsum("bthk,hk,bthk->bth", rc, u, kc)
+        y = jnp.einsum("bhts,bshv->bthv", A, vc)
+        y = y + diag[..., None] * vc
+        # inter-chunk: state seen by token t decayed by Lq
+        y = y + jnp.einsum("bthk,bhkv->bthv", r_t, S)
+        # state update: S' = diag(prod w) S + sum_s (k_s * exp(L_end - L_s)) v_s
+        L_end = L[:, -1]                               # (B,H,K)
+        k_upd = kc * jnp.exp(jnp.clip(L_end[:, None] - L, -30.0, 30.0))
+        S = jnp.exp(jnp.clip(L_end, -30.0, 30.0))[..., None] * S + jnp.einsum(
+            "bshk,bshv->bhkv", k_upd, vc
+        )
+        return S, y
+
+    S0 = jnp.zeros((B, H, head_dim, head_dim), x.dtype)
+    _, ys = jax.lax.scan(scan_chunk, S0, (r_c, k_c, v_c, lw_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, d)
+    y = _group_norm(y, params["ln_scale"], H) * g
+    return y @ params["w_o"]
+
+
+def time_mix_decode(params, x: Array, state, *, head_dim: int = 64):
+    """One-token decode. state = (S (B,H,K,V), x_prev (B,1,d))."""
+    B, _, d = x.shape
+    H = d // head_dim
+    S, x_prev = state
+    mix = lambda i: x + (x_prev - x) * params["mu"][i]
+    r = (mix(0) @ params["w_r"]).reshape(B, H, head_dim)
+    k = (mix(1) @ params["w_k"]).reshape(B, H, head_dim)
+    v = (mix(2) @ params["w_v"]).reshape(B, H, head_dim)
+    lw = _decay(params, mix(3)).reshape(B, H, head_dim)
+    g = jax.nn.silu(mix(4) @ params["w_g"])
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, S + params["u"][None, :, :, None] * kv)
+    S = jnp.exp(lw)[..., None] * S + kv
+    y = y.reshape(B, 1, d)
+    y = _group_norm(y, params["ln_scale"], H) * g
+    return y @ params["w_o"], (S, x)
+
+
+def channel_mix(params, x: Array, last: Array | None = None):
+    """RWKV6 FFN ('channel mixing'). Returns (out, x) — x is the new shift."""
+    xs = _token_shift(x, last)
+    xk = x + (xs - x) * params["mu_ffn"][0]
+    xr = x + (xs - x) * params["mu_ffn"][1]
+    kk = jnp.square(jax.nn.relu(xk @ params["w_ffn_k"]))
+    return jax.nn.sigmoid(xr @ params["w_ffn_r"]) * (kk @ params["w_ffn_v"]), x
+
+
+def rwkv6_init_state(B: int, d: int, *, head_dim: int = 64, dtype=jnp.float32):
+    H = d // head_dim
+    S = jnp.zeros((B, H, head_dim, head_dim), dtype)
+    x_prev_tm = jnp.zeros((B, 1, d), dtype)
+    x_prev_cm = jnp.zeros((B, 1, d), dtype)
+    return S, x_prev_tm, x_prev_cm

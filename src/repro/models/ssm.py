@@ -1,0 +1,178 @@
+"""Mamba2 (SSD) block — chunked state-space duality form (arXiv:2405.21060).
+
+Recurrence (per head h, scalar decay):
+    h_t = exp(A dt_t) h_{t-1} + dt_t * B_t x_t^T        h: (N, P)
+    y_t = C_t h_t + D * x_t
+
+Chunked evaluation (chunk Cs): within a chunk the quadratic form
+    Y_intra[t] = sum_{s<=t} (C_t . B_s) exp(l_t - l_s) dt_s x_s,
+    l = cumsum(A dt)
+is a (Cs x Cs) masked GEMM per head; across chunks a (N, P) state is
+carried by a lax.scan. Memory O(B H Cs^2 + B H N P) instead of the
+O(B T H N P) a naive associative scan would materialize.
+
+TPU notes: the (Cs x Cs) intra form is MXU-shaped; the chunk scan is the
+standard sequential-grid pattern. n_groups = 1 (B/C shared across heads),
+matching the Zamba2 configuration.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, rmsnorm, rmsnorm_params
+
+Array = jax.Array
+
+
+def mamba2_params(key, d: int, *, d_state: int = 64, head_dim: int = 64, expand: int = 2, conv_w: int = 4):
+    d_inner = expand * d
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    params = {
+        # fused input projection: [z gate | x | B | C | dt]
+        "w_in": _init(ks[0], (d, 2 * d_inner + 2 * d_state + n_heads)),
+        "conv": _init(ks[1], (conv_w, d_inner + 2 * d_state), scale=0.5),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": rmsnorm_params(d_inner)[0],
+        "w_out": _init(ks[2], (d_inner, d), scale=1.0 / (d_inner**0.5)),
+    }
+    spec = {
+        "w_in": ("embed", "ffn"),
+        "conv": (None, "ffn"),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": {"scale": ("ffn",)},
+        "w_out": ("ffn", "embed"),
+    }
+    return params, spec
+
+
+def _split_proj(proj, d_inner, d_state, n_heads):
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner : 2 * d_inner]
+    Bmat = proj[..., 2 * d_inner : 2 * d_inner + d_state]
+    Cmat = proj[..., 2 * d_inner + d_state : 2 * d_inner + 2 * d_state]
+    dt = proj[..., 2 * d_inner + 2 * d_state :]
+    return z, x, Bmat, Cmat, dt
+
+
+def _causal_conv(x: Array, w: Array, carry: Array | None = None):
+    """Depthwise causal conv. x: (B, T, C), w: (W, C). carry: (B, W-1, C)."""
+    W = w.shape[0]
+    if carry is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out), xp[:, -(W - 1) :, :]
+
+
+def mamba2_forward(params, x_in: Array, *, d_state: int = 64, head_dim: int = 64, chunk: int = 128):
+    """Training/prefill path. x_in: (B, T, d) -> (B, T, d)."""
+    B, T, d = x_in.shape
+    d_inner = params["w_out"].shape[0]
+    n_heads = d_inner // head_dim
+
+    proj = x_in @ params["w_in"]
+    z, x, Bm, Cm, dt = _split_proj(proj, d_inner, d_state, n_heads)
+    xbc, _ = _causal_conv(jnp.concatenate([x, Bm, Cm], axis=-1), params["conv"])
+    x, Bm, Cm = (
+        xbc[..., :d_inner],
+        xbc[..., d_inner : d_inner + d_state],
+        xbc[..., d_inner + d_state :],
+    )
+    dt = jax.nn.softplus(dt + params["dt_bias"])          # (B, T, H)
+    A = -jnp.exp(params["A_log"])                         # (H,) negative
+    xh = x.reshape(B, T, n_heads, head_dim)
+
+    n_chunks = T // chunk
+    assert n_chunks * chunk == T, "T must be divisible by chunk"
+    r = lambda t: t.reshape(B, n_chunks, chunk, *t.shape[2:])
+    xh_c, B_c, C_c, dt_c = r(xh), r(Bm), r(Cm), r(dt)
+
+    def scan_chunk(state, inputs):
+        # state: (B, H, N, P); inputs sliced per chunk.
+        xc, bc, cc, dtc = inputs                           # (B,Cs,H,P) (B,Cs,N) ...
+        l = jnp.cumsum(A[None, None, :] * dtc, axis=1)     # (B,Cs,H) log-decay
+        # intra-chunk: G[t,s] = (C_t.B_s) exp(l_t - l_s) dt_s, s<=t
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)            # (B,Cs,Cs)
+        decay = jnp.exp(
+            jnp.clip(l[:, :, None, :] - l[:, None, :, :], -30.0, 0.0)
+        )                                                  # (B,Cs,Cs,H) t>=s
+        mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+        G = cb[..., None] * decay * dtc[:, None, :, :]     # (B,Cs,Cs,H)
+        G = jnp.where(mask[None, :, :, None], G, 0.0)
+        y_intra = jnp.einsum("btsh,bshp->bthp", G, xc)
+        # inter-chunk: y += C_t exp(l_t) S_prev
+        y_inter = jnp.einsum(
+            "btn,bth,bhnp->bthp", cc, jnp.exp(l), state
+        )
+        # state update: S = exp(l_end) S + sum_s exp(l_end - l_s) dt_s B_s x_s^T
+        l_end = l[:, -1:, :]                               # (B,1,H)
+        w_s = jnp.exp(jnp.clip(l_end - l, -30.0, 0.0)) * dtc  # (B,Cs,H)
+        ds = jnp.einsum("bsn,bsh,bshp->bhnp", bc, w_s, xc)
+        state = jnp.exp(l_end[:, 0, :])[:, :, None, None] * state + ds
+        return state, y_intra + y_inter
+
+    init = jnp.zeros((B, n_heads, d_state, head_dim), x_in.dtype)
+    # move chunk axis to scan position
+    seq = (
+        xh_c.transpose(1, 0, 2, 3, 4),
+        B_c.transpose(1, 0, 2, 3),
+        C_c.transpose(1, 0, 2, 3),
+        dt_c.transpose(1, 0, 2, 3),
+    )
+    _, ys = jax.lax.scan(scan_chunk, init, seq)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, n_heads, head_dim)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(B, T, d_inner)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    return y @ params["w_out"]
+
+
+def mamba2_decode(params, x_in: Array, state, *, d_state: int = 64, head_dim: int = 64):
+    """One-token decode. x_in: (B, 1, d); state = (ssm (B,H,N,P), conv carry).
+
+    O(H N P) per token — constant in context length (the SSM analogue of the
+    paper's O(d^2) collapsed predictor).
+    """
+    B = x_in.shape[0]
+    d_inner = params["w_out"].shape[0]
+    n_heads = d_inner // head_dim
+    ssm, conv_carry = state
+
+    proj = x_in @ params["w_in"]
+    z, x, Bm, Cm, dt = _split_proj(proj, d_inner, d_state, n_heads)
+    xbc, conv_carry = _causal_conv(
+        jnp.concatenate([x, Bm, Cm], axis=-1), params["conv"], conv_carry
+    )
+    x, Bm, Cm = (
+        xbc[..., :d_inner],
+        xbc[..., d_inner : d_inner + d_state],
+        xbc[..., d_inner + d_state :],
+    )
+    dt = jax.nn.softplus(dt + params["dt_bias"])[:, 0]     # (B,H)
+    A = -jnp.exp(params["A_log"])
+    xh = x.reshape(B, n_heads, head_dim)
+    alpha = jnp.exp(A[None, :] * dt)                       # (B,H)
+    ssm = alpha[:, :, None, None] * ssm + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bm[:, 0], dt, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], ssm)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    return y @ params["w_out"], (ssm, conv_carry)
+
+
+def mamba2_init_state(B: int, d: int, *, d_state: int = 64, head_dim: int = 64, expand: int = 2, conv_w: int = 4, dtype=jnp.float32):
+    d_inner = expand * d
+    n_heads = d_inner // head_dim
+    ssm = jnp.zeros((B, n_heads, d_state, head_dim), dtype)
+    conv = jnp.zeros((B, conv_w - 1, d_inner + 2 * d_state), dtype)
+    return ssm, conv

@@ -1,0 +1,602 @@
+"""Decoder-stack assembly for all assigned architecture families.
+
+One module builds params+specs and runs forward (train/prefill) and decode
+for: dense/GQA transformers (optionally MoE, optionally QKV-bias),
+hybrid Mamba2+shared-attention (Zamba2 pattern), RWKV6, and VLM stacks with
+interleaved cross-attention (Llama-3.2-vision pattern).
+
+Layer stacks are lax.scan'd over stacked parameter pytrees so the HLO stays
+compact for the 80-cell dry-run; heterogeneous patterns (hybrid / vlm) use a
+small Python loop of scanned super-blocks.
+
+Attention backends:
+  "softmax"    exact attention (training + the KV-cache decode baseline)
+  "maclaurin"  the paper's second-order collapse (state decode; long_500k)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import maclaurin_attention as mac
+from repro.models.attention import (
+    attention_params,
+    cross_attention,
+    cross_attention_params,
+    decode_attention,
+    self_attention,
+    _project_qkv,
+)
+from repro.models.layers import (
+    embedding_params,
+    embed,
+    lm_head,
+    lm_head_params,
+    rmsnorm,
+    rmsnorm_params,
+    swiglu,
+    swiglu_params,
+)
+from repro.models.moe import moe_forward, moe_params
+from repro.models.rwkv import (
+    channel_mix,
+    rwkv6_init_state,
+    rwkv6_params,
+    time_mix_decode,
+    time_mix_forward,
+)
+from repro.models.ssm import (
+    mamba2_decode,
+    mamba2_forward,
+    mamba2_init_state,
+    mamba2_params,
+)
+
+Array = jax.Array
+
+
+# ======================================================================
+# parameter construction
+# ======================================================================
+
+
+def _stack(fn, key, n: int):
+    """Build n copies of (params, spec) and stack the params along axis 0."""
+    keys = jax.random.split(key, n)
+    ps = [fn(k) for k in keys]
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *[p for p, _ in ps])
+    spec = jax.tree.map(
+        lambda s: ("layers",) + s, ps[0][1], is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return params, spec
+
+
+def _dense_layer_params(cfg: ModelConfig, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p_attn, s_attn = attention_params(
+        k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qkv_bias
+    )
+    params = {
+        "ln1": rmsnorm_params(cfg.d_model)[0],
+        "attn": p_attn,
+        "ln2": rmsnorm_params(cfg.d_model)[0],
+    }
+    spec = {
+        "ln1": rmsnorm_params(cfg.d_model)[1],
+        "attn": s_attn,
+        "ln2": rmsnorm_params(cfg.d_model)[1],
+    }
+    if cfg.moe_num_experts:
+        p_moe, s_moe = moe_params(k2, cfg.d_model, cfg.moe_d_ff, cfg.moe_num_experts)
+        params["moe"], spec["moe"] = p_moe, s_moe
+        if cfg.moe_dense_residual:
+            p_ffn, s_ffn = swiglu_params(k3, cfg.d_model, cfg.d_ff)
+            params["ffn"], spec["ffn"] = p_ffn, s_ffn
+    else:
+        p_ffn, s_ffn = swiglu_params(k3, cfg.d_model, cfg.d_ff)
+        params["ffn"], spec["ffn"] = p_ffn, s_ffn
+    return params, spec
+
+
+def init_params(cfg: ModelConfig, key):
+    """Returns (params, spec) for any family."""
+    k_emb, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    p_emb, s_emb = embedding_params(k_emb, cfg.vocab_size, cfg.d_model)
+    p_head, s_head = lm_head_params(k_head, cfg.d_model, cfg.vocab_size)
+    params = {"embed": p_emb, "lm_head": p_head, "final_ln": rmsnorm_params(cfg.d_model)[0]}
+    spec = {"embed": s_emb, "lm_head": s_head, "final_ln": rmsnorm_params(cfg.d_model)[1]}
+
+    if cfg.family == "ssm":  # rwkv6
+        p, s = _stack(
+            lambda k: rwkv6_params(k, cfg.d_model, cfg.d_ff, head_dim=cfg.rwkv_head_dim),
+            k_layers,
+            cfg.n_layers,
+        )
+        params["layers"], spec["layers"] = p, s
+    elif cfg.family == "hybrid":  # zamba2: mamba backbone + ONE shared attn block
+        p, s = _stack(
+            lambda k: mamba2_params(
+                k, cfg.d_model, d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+            ),
+            k_layers,
+            cfg.n_layers,
+        )
+        params["layers"], spec["layers"] = p, s
+        p_sh, s_sh = _dense_layer_params(cfg, k_extra)
+        params["shared_attn"], spec["shared_attn"] = p_sh, s_sh
+    elif cfg.family == "vlm":
+        n_cross = cfg.n_layers // (cfg.cross_attn_every or cfg.n_layers)
+        n_self = cfg.n_layers - n_cross
+        per_block = n_self // max(n_cross, 1)
+        k_self, k_cross = jax.random.split(k_layers)
+        p_self, s_self = _stack(lambda k: _dense_layer_params(cfg, k), k_self, n_self)
+        params["layers"], spec["layers"] = p_self, s_self
+
+        def _cross(k):
+            kc, kf = jax.random.split(k)
+            pc, sc = cross_attention_params(kc, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+            pf, sf = swiglu_params(kf, cfg.d_model, cfg.d_ff)
+            return (
+                {"ln1": rmsnorm_params(cfg.d_model)[0], "xattn": pc,
+                 "ln2": rmsnorm_params(cfg.d_model)[0], "ffn": pf},
+                {"ln1": rmsnorm_params(cfg.d_model)[1], "xattn": sc,
+                 "ln2": rmsnorm_params(cfg.d_model)[1], "ffn": sf},
+            )
+
+        p_cross, s_cross = _stack(_cross, k_cross, n_cross)
+        params["cross_layers"], spec["cross_layers"] = p_cross, s_cross
+    else:  # dense / moe / audio — homogeneous stack
+        p, s = _stack(lambda k: _dense_layer_params(cfg, k), k_layers, cfg.n_layers)
+        params["layers"], spec["layers"] = p, s
+    return params, spec
+
+
+# ======================================================================
+# forward (train / prefill)
+# ======================================================================
+
+
+def _attn_forward(cfg: ModelConfig, p_attn, x, positions):
+    """Self-attention dispatch over backends/implementations."""
+    if cfg.attention_backend == "maclaurin":
+        B, T, _ = x.shape
+        q, k, v = _project_qkv(
+            p_attn, x, cfg.n_heads, cfg.n_kv_heads, cfg.hd, positions, cfg.rope_theta
+        )
+        out = mac.maclaurin_attention_gqa(q, k, v)
+        return out.reshape(B, T, cfg.n_heads * cfg.hd) @ p_attn["w_o"]
+    if cfg.attention_impl == "flash":
+        from repro.kernels.flash_attn import flash_attention
+
+        B, T, _ = x.shape
+        q, k, v = _project_qkv(
+            p_attn, x, cfg.n_heads, cfg.n_kv_heads, cfg.hd, positions, cfg.rope_theta
+        )
+        g = cfg.n_heads // cfg.n_kv_heads
+        kq = jnp.repeat(k, g, axis=2).transpose(0, 2, 1, 3)
+        vq = jnp.repeat(v, g, axis=2).transpose(0, 2, 1, 3)
+        out = flash_attention(q.transpose(0, 2, 1, 3), kq, vq)
+        out = out.transpose(0, 2, 1, 3).reshape(B, T, cfg.n_heads * cfg.hd)
+        return out @ p_attn["w_o"]
+    return self_attention(
+        p_attn, x,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+        positions=positions, rope_theta=cfg.rope_theta, causal=True,
+        scores_dtype=jnp.dtype(cfg.attn_scores_dtype),
+    )
+
+
+def _dense_block(cfg: ModelConfig, p, x, positions):
+    """Pre-norm attention + FFN/MoE block. Returns (x, aux_loss)."""
+    x = x + _attn_forward(cfg, p["attn"], rmsnorm(p["ln1"], x), positions)
+    h = rmsnorm(p["ln2"], x)
+    aux = jnp.float32(0.0)
+    if cfg.moe_num_experts:
+        y, aux = moe_forward(p["moe"], h, top_k=cfg.moe_top_k)
+        if cfg.moe_dense_residual:
+            y = y + swiglu(p["ffn"], h)
+    else:
+        y = swiglu(p["ffn"], h)
+    return x + y, aux
+
+
+def _scan_layers(cfg: ModelConfig, block_fn, x, stacked, *extra):
+    """lax.scan over a stacked layer pytree, accumulating aux losses.
+
+    The residual stream is re-pinned to batch sharding every layer —
+    without this GSPMD tends to inherit the FSDP weights' 'data' sharding
+    on the embed dim and silently replicates attention interiors."""
+    from repro.sharding.hints import hint
+
+    def body(carry, p):
+        x, aux = carry
+        # "seq" maps to None by default; SP_RULES maps it to 'model'
+        # (sequence parallelism between blocks).
+        x = hint(x, "batch", "seq", None)
+        x2, a = block_fn(cfg, p, x, *extra)
+        x2 = hint(x2, "batch", "seq", None)
+        return (x2, aux + a), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params, tokens: Array, image_embeds: Array | None = None):
+    """Full-sequence forward -> (logits, aux_loss). tokens: (B, T)."""
+    from repro.sharding.hints import hint
+
+    dtype = jnp.dtype(cfg.dtype)
+    B, T = tokens.shape
+    x = embed(params["embed"], tokens).astype(dtype)
+    x = hint(x, "batch", None, None)
+    positions = jnp.arange(T, dtype=jnp.int32)
+    cast = lambda p: jax.tree.map(lambda l: l.astype(dtype), p)
+
+    if cfg.family == "ssm":
+        def rwkv_block(cfg, p, x):
+            x = x + time_mix_forward(
+                p, rmsnorm({"scale": p["ln1"]}, x),
+                head_dim=cfg.rwkv_head_dim, chunk=cfg.scan_chunk,
+            )
+            out, _ = channel_mix(p, rmsnorm({"scale": p["ln2"]}, x))
+            return x + out, jnp.float32(0.0)
+
+        x, aux = _scan_layers(cfg, rwkv_block, x, cast(params["layers"]))
+    elif cfg.family == "hybrid":
+        k_every = cfg.hybrid_attn_every
+        L = cfg.n_layers
+        n_groups = L // k_every
+        stacked = cast(params["layers"])
+        grouped = jax.tree.map(
+            lambda l: l.reshape(n_groups, k_every, *l.shape[1:]), stacked
+        )
+        shared = cast(params["shared_attn"])
+        positions_ = positions
+        aux = jnp.float32(0.0)
+
+        def mamba_block(cfg, p, x):
+            return x + mamba2_forward(
+                p, x, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                chunk=cfg.scan_chunk,
+            ), jnp.float32(0.0)
+
+        for g in range(n_groups):
+            grp = jax.tree.map(lambda l: l[g], grouped)
+            x, a = _scan_layers(cfg, mamba_block, x, grp)
+            aux += a
+            x, a = _dense_block(cfg, shared, x, positions_)  # shared weights
+            aux += a
+    elif cfg.family == "vlm":
+        assert image_embeds is not None
+        ctx = image_embeds.astype(dtype)
+        k_every = cfg.cross_attn_every
+        n_cross = cfg.n_layers // k_every
+        per_block = (cfg.n_layers - n_cross) // n_cross
+        stacked = cast(params["layers"])
+        grouped = jax.tree.map(
+            lambda l: l.reshape(n_cross, per_block, *l.shape[1:]), stacked
+        )
+        cross_stacked = cast(params["cross_layers"])
+        aux = jnp.float32(0.0)
+
+        def superblock(carry, ps):
+            x, aux = carry
+            grp, pc = ps
+            x, a = _scan_layers(cfg, _dense_block, x, grp, positions)
+            h = rmsnorm(pc["ln1"], x)
+            x = x + cross_attention(
+                pc["xattn"], h, ctx, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.hd,
+            )
+            x = x + swiglu(pc["ffn"], rmsnorm(pc["ln2"], x))
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(superblock, (x, aux), (grouped, cross_stacked))
+    else:
+        x, aux = _scan_layers(cfg, _dense_block, x, cast(params["layers"]), positions)
+
+    x = rmsnorm(params["final_ln"], x)
+    logits = lm_head(cast(params["lm_head"]), x)
+    return hint(logits, "batch", None, "vocab"), aux
+
+
+# ======================================================================
+# decode (serve_step substrate)
+# ======================================================================
+
+
+def _mac_attn_decode(cfg: ModelConfig, p_attn, x, pos, state: mac.MacState):
+    """Maclaurin-state decode attention: the paper's O(d^2) collapse.
+
+    state leaves have batch dims (B, Hkv). Extend-then-readout = causal
+    inclusive of the current token (matches the kernel/ref semantics).
+    """
+    B = x.shape[0]
+    Hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(
+        p_attn, x, cfg.n_heads, cfg.n_kv_heads, cfg.hd, positions, cfg.rope_theta
+    )
+    k_bh = k.transpose(0, 2, 1, 3)                      # (B, Hkv, 1, hd)
+    v_bh = v.transpose(0, 2, 1, 3)
+    state = mac.extend_state(state, k_bh.astype(jnp.float32), v_bh.astype(jnp.float32))
+    q_bh = q.reshape(B, 1, Hkv, g, cfg.hd)[:, 0].astype(jnp.float32)  # (B, Hkv, g, hd)
+    out, _valid = mac.readout(state, q_bh)              # (B, Hkv, g, hd)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd).astype(x.dtype)
+    return out @ p_attn["w_o"], state
+
+
+def _dense_block_decode(cfg: ModelConfig, p, x, pos, attn_cache):
+    """One-token dense block. attn_cache: (ck, cv) | int8 4-tuple | MacState."""
+    h = rmsnorm(p["ln1"], x)
+    if cfg.attention_backend == "maclaurin":
+        attn_out, attn_cache = _mac_attn_decode(cfg, p["attn"], h, pos, attn_cache)
+    elif isinstance(attn_cache, tuple) and len(attn_cache) == 4:
+        from repro.models.attention import decode_attention_quant
+
+        ck, cv, ks, vs = attn_cache
+        attn_out, ck, cv, ks, vs = decode_attention_quant(
+            p["attn"], h, ck, cv, ks, vs, pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta,
+        )
+        attn_cache = (ck, cv, ks, vs)
+    else:
+        ck, cv = attn_cache
+        attn_out, ck, cv = decode_attention(
+            p["attn"], h, ck, cv, pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta,
+        )
+        attn_cache = (ck, cv)
+    x = x + attn_out
+    h2 = rmsnorm(p["ln2"], x)
+    if cfg.moe_num_experts:
+        y, _ = moe_forward(p["moe"], h2, top_k=cfg.moe_top_k, return_aux=False)
+        if cfg.moe_dense_residual:
+            y = y + swiglu(p["ffn"], h2)
+    else:
+        y = swiglu(p["ffn"], h2)
+    return x + y, attn_cache
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int, image_embeds: Array | None = None,
+               params=None, dtype=jnp.bfloat16):
+    """Build the decode cache pytree for a context window of S tokens.
+
+    softmax backend: (L, B, S, Hkv, hd) KV tensors — O(S) memory.
+    maclaurin backend: MacState with (L, B, Hkv, d^2-ish) leaves — O(d^2),
+    INDEPENDENT of S (the paper's collapse; S only bounds positions).
+    """
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    def kv(L):
+        if cfg.kv_cache_dtype == "int8" and cfg.family not in ("hybrid", "vlm"):
+            # int8 values + per-token-per-head f32 scales (dense archs)
+            return (
+                jnp.zeros((L, B, S, Hkv, hd), jnp.int8),
+                jnp.zeros((L, B, S, Hkv, hd), jnp.int8),
+                jnp.zeros((L, B, S, Hkv, 1), jnp.float32),
+                jnp.zeros((L, B, S, Hkv, 1), jnp.float32),
+            )
+        return (
+            jnp.zeros((L, B, S, Hkv, hd), dtype),
+            jnp.zeros((L, B, S, Hkv, hd), dtype),
+        )
+
+    def mac_state(L):
+        return mac.init_state((L, B, Hkv), hd, hd)
+
+    if cfg.family == "ssm":
+        S_, x_tm, x_cm = rwkv6_init_state(B, cfg.d_model, head_dim=cfg.rwkv_head_dim)
+        L = cfg.n_layers
+        tile = lambda t: jnp.broadcast_to(t[None], (L, *t.shape)).astype(jnp.float32)
+        return {"S": tile(S_), "x_tm": tile(x_tm), "x_cm": tile(x_cm)}
+    if cfg.family == "hybrid":
+        ssm, conv = mamba2_init_state(
+            B, cfg.d_model, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+            expand=cfg.ssm_expand,
+        )
+        L = cfg.n_layers
+        tile = lambda t: jnp.broadcast_to(t[None], (L, *t.shape)).astype(jnp.float32)
+        G = cfg.n_layers // cfg.hybrid_attn_every
+        attn = mac_state(G) if cfg.attention_backend == "maclaurin" else kv(G)
+        return {"ssm": tile(ssm), "conv": tile(conv), "attn": attn}
+    if cfg.family == "vlm":
+        k_every = cfg.cross_attn_every
+        n_cross = cfg.n_layers // k_every
+        n_self = cfg.n_layers - n_cross
+        out = {"self": mac_state(n_self) if cfg.attention_backend == "maclaurin" else kv(n_self)}
+        # Cross-attention context: precompute image K/V (or their Maclaurin
+        # state — the paper's fixed-SV-set setting) once per request.
+        assert image_embeds is not None and params is not None
+        cl = params["cross_layers"]
+
+        def build(pc):
+            N = image_embeds.shape[1]
+            kx = (image_embeds.astype(dtype) @ pc["xattn"]["w_k"].astype(dtype)).reshape(B, N, Hkv, hd)
+            vx = (image_embeds.astype(dtype) @ pc["xattn"]["w_v"].astype(dtype)).reshape(B, N, Hkv, hd)
+            if cfg.attention_backend == "maclaurin":
+                st = mac.init_state((B, Hkv), hd, hd)
+                return mac.extend_state(
+                    st, kx.transpose(0, 2, 1, 3).astype(jnp.float32),
+                    vx.transpose(0, 2, 1, 3).astype(jnp.float32),
+                )
+            return (kx, vx)
+
+        out["cross"] = jax.vmap(build)(cl)
+        return out
+    return {"kv": mac_state(cfg.n_layers) if cfg.attention_backend == "maclaurin" else kv(cfg.n_layers)}
+
+
+def decode(cfg: ModelConfig, params, tokens: Array, pos, cache,
+           image_embeds: Array | None = None):
+    """One decode step. tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+    from repro.sharding.hints import hint
+
+    dtype = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens).astype(dtype)
+    x = hint(x, "batch", None, None)
+    cast = lambda p: jax.tree.map(lambda l: l.astype(dtype), p)
+
+    if cfg.family == "ssm":
+        def body(x, inp):
+            # states are stored f32 (long-horizon accumulation); compute in
+            # cfg.dtype; residual stream stays in cfg.dtype.
+            p, S_, x_tm, x_cm = inp
+            h = rmsnorm({"scale": p["ln1"]}, x)
+            out, (S_, x_tm) = time_mix_decode(
+                p, h, (S_, x_tm.astype(h.dtype)), head_dim=cfg.rwkv_head_dim
+            )
+            x = x + out.astype(x.dtype)
+            h2 = rmsnorm({"scale": p["ln2"]}, x)
+            out2, x_cm = channel_mix(p, h2, x_cm.astype(h2.dtype))
+            x = x + out2.astype(x.dtype)
+            return x, (
+                S_.astype(jnp.float32),
+                x_tm.astype(jnp.float32),
+                x_cm.astype(jnp.float32),
+            )
+
+        x, (S_n, xtm_n, xcm_n) = jax.lax.scan(
+            body, x, (cast(params["layers"]), cache["S"], cache["x_tm"], cache["x_cm"])
+        )
+        cache = {"S": S_n, "x_tm": xtm_n, "x_cm": xcm_n}
+    elif cfg.family == "hybrid":
+        k_every = cfg.hybrid_attn_every
+        G = cfg.n_layers // k_every
+        grouped_p = jax.tree.map(
+            lambda l: l.reshape(G, k_every, *l.shape[1:]), cast(params["layers"])
+        )
+        grouped_ssm = cache["ssm"].reshape(G, k_every, *cache["ssm"].shape[1:])
+        grouped_conv = cache["conv"].reshape(G, k_every, *cache["conv"].shape[1:])
+        shared = cast(params["shared_attn"])
+        new_ssm, new_conv, new_attn = [], [], []
+        for g in range(G):
+            def body(x, inp):
+                p, ssm_s, conv_s = inp
+                out, (ssm_s, conv_s) = mamba2_decode(
+                    p, x, (ssm_s, conv_s), d_state=cfg.ssm_state,
+                    head_dim=cfg.ssm_head_dim,
+                )
+                return x + out.astype(x.dtype), (
+                    ssm_s.astype(jnp.float32),
+                    conv_s.astype(jnp.float32),
+                )
+
+            grp = jax.tree.map(lambda l: l[g], grouped_p)
+            x, (s_n, c_n) = jax.lax.scan(body, x, (grp, grouped_ssm[g], grouped_conv[g]))
+            new_ssm.append(s_n)
+            new_conv.append(c_n)
+            ac = jax.tree.map(lambda l: l[g], cache["attn"],
+                              is_leaf=lambda l: isinstance(l, jnp.ndarray))
+            x, ac = _dense_block_decode(cfg, shared, x, pos, ac)
+            new_attn.append(ac)
+        cache = {
+            "ssm": jnp.concatenate(new_ssm, axis=0).reshape(cache["ssm"].shape),
+            "conv": jnp.concatenate(new_conv, axis=0).reshape(cache["conv"].shape),
+            "attn": jax.tree.map(lambda *ls: jnp.stack(ls), *new_attn),
+        }
+    elif cfg.family == "vlm":
+        k_every = cfg.cross_attn_every
+        n_cross = cfg.n_layers // k_every
+        per_block = (cfg.n_layers - n_cross) // n_cross
+        grouped_p = jax.tree.map(
+            lambda l: l.reshape(n_cross, per_block, *l.shape[1:]), cast(params["layers"])
+        )
+        grouped_c = jax.tree.map(
+            lambda l: l.reshape(n_cross, per_block, *l.shape[1:]), cache["self"]
+        )
+        cross_p = cast(params["cross_layers"])
+        new_self = []
+        for g in range(n_cross):
+            def body(x, inp):
+                p, ac = inp
+                x, ac = _dense_block_decode(cfg, p, x, pos, ac)
+                return x, ac
+
+            grp = jax.tree.map(lambda l: l[g], grouped_p)
+            acg = jax.tree.map(lambda l: l[g], grouped_c)
+            x, ac_n = jax.lax.scan(body, x, (grp, acg))
+            new_self.append(ac_n)
+            pc = jax.tree.map(lambda l: l[g], cross_p)
+            cc = jax.tree.map(lambda l: l[g], cache["cross"])
+            h = rmsnorm(pc["ln1"], x)
+            if cfg.attention_backend == "maclaurin":
+                Hkv, gq = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+                q = (h @ pc["xattn"]["w_q"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+                q_bh = q.reshape(B, 1, Hkv, gq, cfg.hd)[:, 0].astype(jnp.float32)
+                out, _ = mac.readout(cc, q_bh)
+                out = out.reshape(B, 1, cfg.n_heads * cfg.hd).astype(x.dtype)
+                x = x + out @ pc["xattn"]["w_o"]
+            else:
+                kx, vx = cc
+                from repro.models.attention import _gqa_scores_full
+                q = (h @ pc["xattn"]["w_q"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+                out = _gqa_scores_full(q, kx.astype(q.dtype), vx.astype(q.dtype), causal=False)
+                x = x + out.reshape(B, 1, cfg.n_heads * cfg.hd) @ pc["xattn"]["w_o"]
+            x = x + swiglu(pc["ffn"], rmsnorm(pc["ln2"], x))
+        cache = {
+            # re-flatten (n_cross, per_block, ...) -> (n_self, ...)
+            "self": jax.tree.map(
+                lambda *ls: jnp.stack(ls).reshape(-1, *ls[0].shape[1:]), *new_self
+            ),
+            "cross": cache["cross"],
+        }
+    else:
+        def body(x, inp):
+            p, ac = inp
+            x, ac = _dense_block_decode(cfg, p, x, pos, ac)
+            return x, ac
+
+        x, kv_n = jax.lax.scan(body, x, (cast(params["layers"]), cache["kv"]))
+        cache = {"kv": kv_n}
+
+    x = rmsnorm(params["final_ln"], x)
+    logits = lm_head(cast(params["lm_head"]), x)
+    return logits, cache
+
+
+def cache_spec(cfg: ModelConfig):
+    """Logical-axis spec pytree mirroring init_cache's structure (for the
+    partitioner). Must stay in lock-step with init_cache."""
+    kv_leaf = ("layers", "batch", None, "kv_heads", None)
+    if cfg.kv_cache_dtype == "int8" and cfg.family not in ("hybrid", "vlm"):
+        kv_tuple = (kv_leaf, kv_leaf, kv_leaf, kv_leaf)  # + per-token scales
+    else:
+        kv_tuple = (kv_leaf, kv_leaf)
+
+    def mac_spec():
+        return mac.MacState(
+            s1=("layers", "batch", "kv_heads", None, None),
+            s2=("layers", "batch", "kv_heads", None, None),
+            k1=("layers", "batch", "kv_heads", None),
+            k2=("layers", "batch", "kv_heads", None),
+            n=("layers", "batch", "kv_heads", None),
+            v0=("layers", "batch", "kv_heads", None),
+            max_k_sq=("layers", "batch", "kv_heads", None),
+        )
+
+    if cfg.family == "ssm":
+        return {
+            "S": ("layers", "batch", "heads", None, None),
+            "x_tm": ("layers", "batch", None, None),
+            "x_cm": ("layers", "batch", None, None),
+        }
+    if cfg.family == "hybrid":
+        attn = mac_spec() if cfg.attention_backend == "maclaurin" else (kv_leaf, kv_leaf)
+        return {
+            "ssm": ("layers", "batch", "ffn", None, None),
+            "conv": ("layers", "batch", None, "ffn"),
+            "attn": attn,
+        }
+    if cfg.family == "vlm":
+        self_ = mac_spec() if cfg.attention_backend == "maclaurin" else (kv_leaf, kv_leaf)
+        cross = mac_spec() if cfg.attention_backend == "maclaurin" else (kv_leaf, kv_leaf)
+        return {"self": self_, "cross": cross}
+    return {"kv": mac_spec() if cfg.attention_backend == "maclaurin" else kv_tuple}

@@ -1,0 +1,3 @@
+from repro.serve.decode_step import make_serve_step, make_prefill_step
+
+__all__ = ["make_serve_step", "make_prefill_step"]

@@ -1,0 +1,62 @@
+"""Serve-side step factories: prefill and single-token decode.
+
+``make_serve_step(cfg)`` returns the function the decode_32k / long_500k
+dry-run cells lower: (params, tokens(B,1), pos, cache[, image_embeds]) ->
+(logits, new_cache). The cache backend follows cfg.attention_backend:
+
+  softmax    O(S) KV cache — the exact-model baseline
+  maclaurin  O(d^2) moment state — the paper's collapse (context-length-free)
+
+``make_prefill_step(cfg)`` lowers the full-sequence forward (logits only).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import decode, forward
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    if cfg.family == "vlm":
+        def prefill_step(params, tokens, image_embeds):
+            logits, _ = forward(cfg, params, tokens, image_embeds)
+            return logits
+    else:
+        def prefill_step(params, tokens):
+            logits, _ = forward(cfg, params, tokens)
+            return logits
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    if cfg.family == "vlm":
+        def serve_step(params, tokens, pos, cache, image_embeds):
+            return decode(cfg, params, tokens, pos, cache, image_embeds)
+    else:
+        def serve_step(params, tokens, pos, cache):
+            return decode(cfg, params, tokens, pos, cache)
+    return serve_step
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, cache, *, steps: int,
+                    start_pos: int = 0, image_embeds=None):
+    """Simple greedy decode loop (examples/serving demo; not the dry-run path)."""
+    import jax.numpy as jnp
+
+    step = jax.jit(make_serve_step(cfg))
+    tok = prompt[:, -1:]
+    out = []
+    pos = start_pos
+    for _ in range(steps):
+        args = (params, tok, jnp.int32(pos), cache)
+        if cfg.family == "vlm":
+            args = args + (image_embeds,)
+        logits, cache = step(*args)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        out.append(tok)
+        pos += 1
+    return jnp.concatenate(out, axis=1), cache

@@ -1,0 +1,15 @@
+from repro.sharding.partitioning import (
+    AxisRules,
+    DEFAULT_RULES,
+    param_shardings,
+    spec_to_pspec,
+    batch_pspec,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "param_shardings",
+    "spec_to_pspec",
+    "batch_pspec",
+]

@@ -1,0 +1,50 @@
+"""Activation-sharding hints (flax-style logical constraints, opt-in).
+
+Model code calls ``hint(x, "batch", None, "vocab")`` at layout-critical
+points (logits, MoE dispatch buffers). Outside a distributed context this is
+an exact no-op, so smoke tests and single-device examples never see a mesh.
+The dry-run / trainer enables hints with the active mesh + rules; the
+constraint is emitted as with_sharding_constraint(NamedSharding(...)),
+auto-downgrading any dim whose size does not divide its mesh extent.
+"""
+
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.sharding.partitioning import AxisRules, spec_to_pspec
+
+_ACTIVE: tuple[Mesh, AxisRules] | None = None
+
+
+@contextmanager
+def use_hints(mesh: Mesh, rules: AxisRules):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def hint(x, *logical):
+    if _ACTIVE is None:
+        return x
+    mesh, rules = _ACTIVE
+    spec = spec_to_pspec(tuple(logical), rules, mesh)
+    fixed = []
+    for dim, s in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if s is None:
+            fixed.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        extent = math.prod(mesh.shape[a] for a in axes)
+        fixed.append(s if dim % extent == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*fixed))
+    )

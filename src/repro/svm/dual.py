@@ -1,0 +1,92 @@
+"""Box-constrained dual kernel-SVM trainer (LIBSVM stand-in), pure JAX.
+
+Solves the C-SVC dual with the bias folded into the kernel (the classic
+"K + 1" trick, which drops the equality constraint sum alpha_i y_i = 0):
+
+    max_alpha  1^T alpha - 1/2 alpha^T Q alpha,   0 <= alpha <= C
+    Q_ij = y_i y_j (K(x_i, x_j) + 1)
+
+by projected gradient ascent with a Lipschitz step (1 / lambda_max(Q),
+estimated by power iteration). The bias is then b = sum_i alpha_i y_i.
+Converges to the same decision function family as LIBSVM's C-SVC up to the
+bias-handling convention; produces genuinely sparse alpha (many exact zeros
+after projection), giving the paper's n_sv < n regime.
+
+The container has no LIBSVM and no network — this trainer is the
+substrate-complete replacement (DESIGN.md §2/§9).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rbf import SVMModel, rbf_kernel
+
+Array = jax.Array
+
+
+def _power_iter_lmax(Q: Array, iters: int = 32) -> Array:
+    """Largest eigenvalue of PSD Q by power iteration (fixed iterations)."""
+    n = Q.shape[0]
+    v = jnp.ones((n,), Q.dtype) / jnp.sqrt(n)
+
+    def body(v, _):
+        w = Q @ v
+        return w / (jnp.linalg.norm(w) + 1e-30), None
+
+    v, _ = jax.lax.scan(body, v, None, length=iters)
+    return v @ (Q @ v)
+
+
+@partial(jax.jit, static_argnames=("num_steps",))
+def train_svc(
+    X: Array,
+    y: Array,
+    gamma: Array,
+    C: Array,
+    num_steps: int = 500,
+    sv_threshold: float = 1e-6,
+) -> tuple[SVMModel, Array]:
+    """Train a binary C-SVC.
+
+    Returns (model, sv_mask). The model keeps ALL rows (static shapes for
+    jit); ``sv_mask`` marks alpha > sv_threshold * C. Use
+    ``compress_support`` to materialize the sparse model outside jit.
+    """
+    n = X.shape[0]
+    K = rbf_kernel(X, X, gamma) + 1.0  # bias folded into kernel
+    Q = (y[:, None] * y[None, :]) * K
+    lmax = _power_iter_lmax(Q)
+    step = 1.0 / (lmax + 1e-12)
+
+    def body(alpha, _):
+        grad = 1.0 - Q @ alpha
+        alpha = jnp.clip(alpha + step * grad, 0.0, C)
+        return alpha, None
+
+    alpha0 = jnp.zeros((n,), X.dtype)
+    alpha, _ = jax.lax.scan(body, alpha0, None, length=num_steps)
+
+    b = jnp.sum(alpha * y)  # from the K+1 trick
+    sv_mask = alpha > sv_threshold * C
+    # Zero out non-SVs so the dense model is numerically identical to the
+    # compressed one.
+    alpha = jnp.where(sv_mask, alpha, 0.0)
+    model = SVMModel(X=X, alpha_y=alpha * y, b=b, gamma=jnp.asarray(gamma))
+    return model, sv_mask
+
+
+def compress_support(model: SVMModel, sv_mask: Array) -> SVMModel:
+    """Drop non-support rows (dynamic shape — call outside jit)."""
+    import numpy as np
+
+    mask = np.asarray(sv_mask)
+    return SVMModel(
+        X=jnp.asarray(np.asarray(model.X)[mask]),
+        alpha_y=jnp.asarray(np.asarray(model.alpha_y)[mask]),
+        b=model.b,
+        gamma=model.gamma,
+    )

@@ -1,0 +1,51 @@
+"""Int8 error-feedback gradient compression (cross-pod wire format).
+
+At 512+ chips the cross-pod hop rides DCN, ~10x slower than ICI; 4x smaller
+gradients is a direct 4x on that term. We use per-tensor symmetric int8
+quantization with error feedback (Seide et al. 2014; 1-bit Adam lineage):
+the quantization residual is carried into the next step, so the *average*
+gradient is unbiased and convergence is preserved (tested in
+tests/test_train.py::test_compressed_training_converges).
+
+Deployment note (honesty ledger, DESIGN.md §9): inside a single jit program
+GSPMD chooses the collective implementation; the quantize/dequantize pair
+here expresses the wire format and its numerics. On a real multi-pod run the
+pair brackets the cross-pod all-reduce via a custom lowering rule or a
+shard_map'd collective; here we apply it to the assembled gradient, which is
+numerically identical for a single reduction step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, ef):
+    """Returns (decompressed grads, new error feedback)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _q8(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g32 - deq
+
+    out = jax.tree.map(one, grads, ef)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_ef
+
+
+def wire_bytes(params) -> int:
+    """Bytes on the cross-pod wire per step with int8 (vs 4 bytes f32)."""
+    return sum(l.size for l in jax.tree.leaves(params))

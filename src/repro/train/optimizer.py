@@ -1,0 +1,118 @@
+"""Optimizers built from scratch (no optax in this container).
+
+AdamW — the default. Adafactor (beta1=0, factored second moment over the
+last two axes) — for the 480B-class models where full Adam moments blow the
+per-device HBM budget even at 256-way sharding (napkin math in DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------- schedules
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(1.0, warmup)
+    frac = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda l: (l * scale).astype(l.dtype), grads), gnorm
+
+
+# ------------------------------------------------------------- AdamW
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1
+):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1**c)
+        vh = v / (1 - b2**c)
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+# ------------------------------------------------------------- Adafactor
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"v": jax.tree.map(init, params), "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(
+    params, grads, state, lr, *, b2=0.999, eps=1e-30, weight_decay=0.0, clip=1.0
+):
+    count = state["count"] + 1
+
+    def upd(p, g, s):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            vr = b2 * s["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * s["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+            u = g * jax.lax.rsqrt(vhat + eps)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = b2 * s["v"] + (1 - b2) * g2
+            u = g * jax.lax.rsqrt(v + eps)
+            new_s = {"v": v}
+        # update clipping (Adafactor's RMS rule)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip)
+        newp = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["v"])
+    res = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = tdef.unflatten([r[0] for r in res])
+    new_v = tdef.unflatten([r[1] for r in res])
+    return new_params, {"v": new_v, "count": count}

@@ -1,0 +1,133 @@
+"""Train / eval step factories.
+
+make_train_step builds a pure (params, opt_state, batch, step) ->
+(params, opt_state, metrics) function ready for jax.jit with NamedSharding
+in/out specs (see launch/dryrun.py and launch/train.py). Features:
+
+  * token cross-entropy + MoE aux loss
+  * microbatch gradient accumulation (lax.scan over microbatches)
+  * global-norm clipping
+  * AdamW or Adafactor (cfg-selected)
+  * optional int8 error-feedback gradient compression (cross-pod wire
+    format; see train/compression.py)
+
+The remat policy lives inside the model (cfg.remat -> jax.checkpoint per
+layer inside the scan).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import softmax_xent
+from repro.models.transformer import forward
+from repro.train import optimizer as opt
+from repro.train import compression
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    aux_loss_weight: float = 0.01
+    microbatches: int = 1
+    compress_grads: bool = False  # int8 error-feedback (cross-pod wire)
+
+
+def make_loss_fn(cfg: ModelConfig, aux_weight: float = 0.01) -> Callable:
+    from repro.sharding.hints import hint
+
+    def loss_fn(params, batch):
+        logits, aux = forward(
+            cfg, params, batch["tokens"], batch.get("image_embeds")
+        )
+        # keep the (B, T, V) slab sharded over batch AND vocab — GSPMD turns
+        # the logsumexp/gather in the loss into local ops + tiny collectives
+        logits = hint(logits, "batch", None, "vocab")
+        xent = softmax_xent(logits, batch["labels"])
+        return xent + aux_weight * aux, {"xent": xent, "aux": aux}
+
+    return loss_fn
+
+
+def init_opt_state(ocfg: OptimizerConfig, params):
+    state = (
+        opt.adafactor_init(params) if ocfg.name == "adafactor" else opt.adamw_init(params)
+    )
+    if ocfg.compress_grads:
+        state["ef"] = compression.init_error_feedback(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimizerConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg, ocfg.aux_loss_weight)
+
+    def train_step(params, opt_state, batch, step):
+        if ocfg.microbatches > 1:
+            n = ocfg.microbatches
+            split = jax.tree.map(
+                lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch
+            )
+
+            def micro(acc, mb):
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                acc_g, acc_l = acc
+                return (
+                    jax.tree.map(jnp.add, acc_g, grads),
+                    acc_l + loss / n,
+                ), metrics
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics = jax.lax.scan(micro, (zeros, 0.0), split)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+
+        if ocfg.compress_grads:
+            grads, new_ef = compression.compress_decompress(
+                grads, opt_state["ef"]
+            )
+        grads, gnorm = opt.clip_by_global_norm(grads, ocfg.clip_norm)
+        lr = opt.cosine_schedule(
+            step, peak_lr=ocfg.peak_lr, warmup=ocfg.warmup, total=ocfg.total_steps
+        )
+        if ocfg.name == "adafactor":
+            new_params, new_state = opt.adafactor_update(
+                params, grads, opt_state, lr, weight_decay=ocfg.weight_decay
+            )
+        else:
+            new_params, new_state = opt.adamw_update(
+                params, grads, opt_state, lr, weight_decay=ocfg.weight_decay
+            )
+        if ocfg.compress_grads:
+            new_state["ef"] = new_ef
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg, 0.0)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,121 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret) vs jnp oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.rbf_pred import rbf_predict, rbf_predict_ref
+from repro.kernels.quadform import quadform_predict, quadform_predict_ref
+from repro.kernels.maclaurin_attn import (
+    maclaurin_attention,
+    maclaurin_attention_ref,
+    softmax_attention_ref,
+    maclaurin_weights,
+)
+from repro.models.maclaurin_attention import (
+    extend_state,
+    init_state,
+    maclaurin_attention_gqa,
+    readout,
+)
+
+
+@pytest.mark.parametrize("n,m,d", [(7, 13, 3), (64, 128, 22), (33, 257, 100), (128, 64, 123)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_rbf_pred_shapes(n, m, d, dtype):
+    rng = np.random.default_rng(n * m)
+    Z = jnp.asarray(rng.standard_normal((n, d)).astype(dtype))
+    X = jnp.asarray(rng.standard_normal((m, d)).astype(dtype))
+    a = jnp.asarray(rng.standard_normal(m).astype(dtype))
+    ref = rbf_predict_ref(Z, X, a, 0.05, -0.2)
+    out = rbf_predict(Z, X, a, 0.05, -0.2, block_n=32, block_m=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,d", [(5, 4), (100, 22), (257, 123), (64, 780)])
+def test_quadform_shapes(n, d):
+    rng = np.random.default_rng(n * d)
+    Z = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    M = rng.standard_normal((d, d)).astype(np.float32)
+    M = jnp.asarray((M + M.T) / 2)
+    v = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    ref_f, ref_sq = quadform_predict_ref(Z, M, v, 0.7, -0.1, 0.02)
+    out_f, out_sq = quadform_predict(Z, M, v, 0.7, -0.1, 0.02, block_n=64)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(ref_f), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(out_sq), np.asarray(ref_sq), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,T,D,DV,chunk", [
+    (1, 1, 32, 8, 8, 8),
+    (2, 3, 100, 16, 16, 32),   # T not divisible by chunk -> padding path
+    (1, 2, 256, 32, 32, 128),
+    (2, 1, 64, 24, 48, 16),    # d_v != d_k
+])
+def test_maclaurin_attn_kernel_vs_ref(B, H, T, D, DV, chunk):
+    rng = np.random.default_rng(B * T + D)
+    q = jnp.asarray(rng.standard_normal((B, H, T, D)).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.standard_normal((B, H, T, D)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, H, T, DV)).astype(np.float32))
+    ref = maclaurin_attention_ref(q, k, v)
+    out = maclaurin_attention(q, k, v, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_maclaurin_weights_positive():
+    """w(u) = 1 + u + u^2/2 >= 1/2 — the normalizer can never vanish."""
+    u = jnp.linspace(-100, 100, 10001)
+    assert float(jnp.min(maclaurin_weights(u))) >= 0.5 - 1e-6
+
+
+def test_maclaurin_attn_approximates_softmax_for_small_logits():
+    """The paper's claim, transplanted: for |u| < 1/2 the attention weights
+    are within ~3% of exp's, so outputs track softmax attention closely."""
+    rng = np.random.default_rng(0)
+    B, H, T, D = 1, 2, 64, 16
+    # scale queries/keys so |q.k|/sqrt(D) stays < 1/2
+    q = jnp.asarray(rng.standard_normal((B, H, T, D)).astype(np.float32)) * 0.35
+    k = jnp.asarray(rng.standard_normal((B, H, T, D)).astype(np.float32)) * 0.35
+    v = jnp.asarray(rng.standard_normal((B, H, T, D)).astype(np.float32))
+    exact = softmax_attention_ref(q, k, v)
+    approx = maclaurin_attention_ref(q, k, v)
+    err = np.abs(np.asarray(exact - approx)) / (np.abs(np.asarray(exact)) + 1e-2)
+    assert np.median(err) < 0.05
+
+
+def test_state_decode_matches_full_attention():
+    """Sequential extend_state+readout == full-sequence maclaurin attention
+    (the O(d^2) decode state is exactly the collapsed predictor)."""
+    rng = np.random.default_rng(1)
+    B, Hkv, T, D = 2, 2, 24, 8
+    g = 2
+    q = jnp.asarray(rng.standard_normal((B, T, Hkv * g, D)).astype(np.float32)) * 0.4
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, D)).astype(np.float32)) * 0.4
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, D)).astype(np.float32))
+    full = maclaurin_attention_gqa(q, k, v)                  # (B, T, Hq, D)
+
+    state = init_state((B, Hkv), D, D)
+    outs = []
+    for t in range(T):
+        kt = k[:, t : t + 1].transpose(0, 2, 1, 3)           # (B,Hkv,1,D)
+        vt = v[:, t : t + 1].transpose(0, 2, 1, 3)
+        state = extend_state(state, kt, vt)
+        qt = q[:, t].reshape(B, Hkv, g, D)
+        out, valid = readout(state, qt)
+        outs.append(out.reshape(B, 1, Hkv * g, D))
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(full), rtol=2e-3, atol=2e-4)
+
+
+def test_readout_validity_flag():
+    """The Eq 3.11 analogue flips when keys/queries leave the safe envelope."""
+    B, Hkv, D = 1, 1, 8
+    state = init_state((B, Hkv), D, D)
+    small_k = 0.1 * jnp.ones((B, Hkv, 4, D))
+    state = extend_state(state, small_k, small_k)
+    q_small = 0.1 * jnp.ones((B, Hkv, 1, D))
+    _, valid = readout(state, q_small)
+    assert bool(jnp.all(valid))
+    q_big = 100.0 * jnp.ones((B, Hkv, 1, D))
+    _, valid2 = readout(state, q_big)
+    assert not bool(jnp.any(valid2))

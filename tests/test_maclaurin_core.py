@@ -1,0 +1,212 @@
+"""Paper-math tests: the Maclaurin collapse (§3), its bounds (§3.1, App A),
+and the degree-2 polynomial relation (§3.2). Includes hypothesis property
+tests of the system invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SVMModel,
+    approximate,
+    approx_decision_function,
+    approx_decision_function_checked,
+    decision_function,
+    gamma_max,
+    maclaurin_exp,
+    maclaurin_rel_error,
+    REL_ERR_AT_HALF,
+)
+from repro.core.bounds import bound_holds, exact_bound_holds, max_abs_exponent
+from repro.core import poly2
+from repro.core.rbf import decision_function_loops, rbf_kernel
+
+
+def _random_model(rng, n_sv=50, d=7, gamma=0.05):
+    X = rng.standard_normal((n_sv, d)).astype(np.float32) * 0.5
+    ay = rng.standard_normal(n_sv).astype(np.float32)
+    return SVMModel(
+        X=jnp.asarray(X), alpha_y=jnp.asarray(ay),
+        b=jnp.float32(0.3), gamma=jnp.float32(gamma),
+    )
+
+
+# ---------------------------------------------------------------- Eq A.1/A.2
+
+
+def test_maclaurin_series_definition():
+    x = jnp.linspace(-2, 2, 101)
+    np.testing.assert_allclose(maclaurin_exp(x), 1 + x + 0.5 * x * x, rtol=1e-6)
+
+
+def test_rel_error_bound_at_half():
+    """Fig 1 / Eq A.2: sup_{|x|<1/2} rel err < 3.05% and is attained at -1/2."""
+    x = jnp.linspace(-0.5, 0.5, 2001)
+    errs = maclaurin_rel_error(x)
+    assert float(jnp.max(errs)) < REL_ERR_AT_HALF
+    assert float(maclaurin_rel_error(jnp.float32(-0.5))) > 0.029  # tight-ish
+
+
+@given(st.floats(-0.5, 0.5))
+@settings(max_examples=50, deadline=None)
+def test_rel_error_property(x):
+    assert float(maclaurin_rel_error(jnp.float32(x))) < REL_ERR_AT_HALF
+
+
+# ---------------------------------------------------------------- Eq 3.7/3.8
+
+
+def test_approx_matches_brute_force_expansion():
+    """f_hat via (c, v, M) == directly substituting Eq 3.6 into the sum."""
+    rng = np.random.default_rng(1)
+    m = _random_model(rng)
+    Z = jnp.asarray(rng.standard_normal((20, 7)).astype(np.float32) * 0.5)
+    sv_sq = jnp.sum(m.X * m.X, axis=1)
+    brute = []
+    for z in Z:
+        u = 2 * m.gamma * (m.X @ z)
+        g_hat = jnp.sum(m.alpha_y * jnp.exp(-m.gamma * sv_sq) * (1 + u + 0.5 * u * u))
+        brute.append(jnp.exp(-m.gamma * jnp.sum(z * z)) * g_hat + m.b)
+    brute = jnp.stack(brute)
+    am = approximate(m)
+    np.testing.assert_allclose(
+        np.asarray(approx_decision_function(am, Z)), np.asarray(brute), rtol=2e-4, atol=2e-5
+    )
+
+
+def test_approx_error_small_under_bound():
+    """When Eq 3.11 holds, decision values are close and labels match."""
+    rng = np.random.default_rng(2)
+    X = rng.standard_normal((80, 6)).astype(np.float32)
+    gm = float(gamma_max(jnp.asarray(X)))
+    m = SVMModel(
+        X=jnp.asarray(X),
+        alpha_y=jnp.asarray(rng.standard_normal(80).astype(np.float32)),
+        b=jnp.float32(0.1),
+        gamma=jnp.float32(gm * 0.9),
+    )
+    Z = jnp.asarray(X[:40] * 0.9)
+    am = approximate(m)
+    f_hat, valid = approx_decision_function_checked(am, Z)
+    assert bool(jnp.all(valid))
+    f = decision_function(m, Z)
+    # per-term rel err < 3.05% -> tight decision values in practice
+    np.testing.assert_allclose(np.asarray(f_hat), np.asarray(f), rtol=0.1, atol=0.02)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_bound_implies_per_term_error_property(seed):
+    """Property (the paper's §3.1 chain): Eq 3.11 -> |2g x^T z| < 1/2 ->
+    every exp term's relative error < 3.05%."""
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(2, 10))
+    X = jnp.asarray(rng.standard_normal((12, d)).astype(np.float32))
+    z = jnp.asarray(rng.standard_normal((d,)).astype(np.float32))
+    gamma = jnp.float32(float(rng.uniform(0.001, 0.3)))
+    max_sq = jnp.max(jnp.sum(X * X, axis=1))
+    if bool(bound_holds(max_sq, jnp.sum(z * z), gamma)):
+        assert bool(exact_bound_holds(X, z, gamma))  # Cauchy-Schwarz chain
+        u = 2 * gamma * (X @ z)
+        assert float(jnp.max(maclaurin_rel_error(u))) < REL_ERR_AT_HALF
+
+
+def test_gamma_max_consistency():
+    """gamma < gamma_max(data) guarantees Eq 3.11 for any pair from data."""
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.standard_normal((64, 5)).astype(np.float32) * 2.0)
+    gm = gamma_max(X)
+    max_sq = jnp.max(jnp.sum(X * X, axis=1))
+    assert bool(bound_holds(max_sq, max_sq, gm * 0.999))
+    assert not bool(bound_holds(max_sq, max_sq, gm * 1.001))
+
+
+def test_cauchy_schwarz_conservatism_grows_with_d():
+    """§4.2: the bound is more conservative in higher d (random vectors)."""
+    rng = np.random.default_rng(4)
+    ratios = []
+    for d in (4, 64, 512):
+        X = jnp.asarray(rng.standard_normal((100, d)).astype(np.float32) / np.sqrt(d))
+        Z = jnp.asarray(rng.standard_normal((100, d)).astype(np.float32) / np.sqrt(d))
+        actual = max_abs_exponent(X, Z, jnp.float32(1.0))
+        worst = 2 * 1.0 * jnp.sqrt(
+            jnp.max(jnp.sum(X**2, 1)) * jnp.max(jnp.sum(Z**2, 1))
+        )
+        ratios.append(float(actual / worst))
+    assert ratios[0] > ratios[1] > ratios[2]
+
+
+# ---------------------------------------------------------------- model size
+
+
+def test_compression_ratio_matches_paper_formula():
+    """Approx model is O(d^2) scalars vs O(n_sv d) — Table 3 accounting."""
+    rng = np.random.default_rng(5)
+    m = _random_model(rng, n_sv=500, d=10)
+    am = approximate(m)
+    assert am.num_parameters() == 10 * 10 + 10 + 4
+    assert m.num_parameters() == 500 * 10 + 500 + 2
+    assert m.num_parameters() / am.num_parameters() > 40
+
+
+# ---------------------------------------------------------------- §3.2 poly2
+
+
+def test_poly2_collapse_is_exact():
+    """The quadratic collapse of a poly-2 kernel model is EXACT (§3.2)."""
+    rng = np.random.default_rng(6)
+    X = jnp.asarray(rng.standard_normal((30, 5)).astype(np.float32))
+    m = poly2.Poly2Model(
+        X=X,
+        alpha_y=jnp.asarray(rng.standard_normal(30).astype(np.float32)),
+        b=jnp.float32(-0.2),
+        gamma=jnp.float32(0.7),
+        beta=jnp.float32(1.0),
+    )
+    Z = jnp.asarray(rng.standard_normal((25, 5)).astype(np.float32))
+    direct = poly2.decision_function(m, Z)
+    collapsed = approx_decision_function(poly2.collapse(m), Z)
+    np.testing.assert_allclose(np.asarray(collapsed), np.asarray(direct), rtol=2e-4, atol=1e-4)
+
+
+def test_rbf_approx_equals_scaled_poly2():
+    """Eqs 3.13-3.16: approximated-RBF == exp(-g||z||^2) * poly2-with-folded-
+    alphas, up to the documented 2x on second-order terms. We verify the
+    construction identities c/v/M directly."""
+    rng = np.random.default_rng(7)
+    m = _random_model(rng, n_sv=20, d=4, gamma=0.3)
+    am = approximate(m)
+    sv_sq = jnp.sum(m.X * m.X, axis=1)
+    folded = poly2.equivalent_poly2_alphas(m.alpha_y, sv_sq, m.gamma)
+    pm = poly2.Poly2Model(
+        X=m.X, alpha_y=folded, b=m.b, gamma=m.gamma, beta=jnp.float32(1.0)
+    )
+    pc = poly2.collapse(pm)
+    np.testing.assert_allclose(np.asarray(pc.c), np.asarray(am.c), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(pc.v), np.asarray(am.v), rtol=1e-4, atol=1e-6)
+    # paper: RBF approx second-order weight = 2 * poly2's (Eq 3.16)
+    np.testing.assert_allclose(np.asarray(2.0 * pc.M), np.asarray(am.M), rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------- LOOPS path
+
+
+def test_loops_equals_gemm_path():
+    rng = np.random.default_rng(8)
+    m = _random_model(rng)
+    Z = jnp.asarray(rng.standard_normal((15, 7)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(decision_function_loops(m, Z)),
+        np.asarray(decision_function(m, Z)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_kernel_matrix_symmetry_and_diag():
+    rng = np.random.default_rng(9)
+    X = jnp.asarray(rng.standard_normal((20, 6)).astype(np.float32))
+    K = rbf_kernel(X, X, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(K), np.asarray(K.T), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(jnp.diag(K)), 1.0, rtol=1e-5)

@@ -1,0 +1,108 @@
+"""Partitioning-rule unit tests + an end-to-end sharded lowering smoke test
+(subprocess: needs its own XLA device count)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.partitioning import (
+    AxisRules,
+    DEFAULT_RULES,
+    TP_ONLY_RULES,
+    batch_pspec,
+    spec_to_pspec,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    # AbstractMesh: rule/spec logic only needs names+sizes, not real devices
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+def test_spec_to_pspec_basic():
+    mesh = _mesh()
+    assert spec_to_pspec(("embed", "ffn"), DEFAULT_RULES, mesh) == P("data", "model")
+    assert spec_to_pspec(("vocab", "embed"), DEFAULT_RULES, mesh) == P("model", "data")
+    assert spec_to_pspec((None, "heads"), DEFAULT_RULES, mesh) == P(None, "model")
+
+
+def test_mesh_axis_used_at_most_once():
+    mesh = _mesh()
+    # ("embed", "embed") must not map 'data' twice
+    ps = spec_to_pspec(("embed", "embed"), DEFAULT_RULES, mesh)
+    assert ps == P("data", None)
+
+
+def test_missing_mesh_axes_degrade_to_replication():
+    mesh = _mesh((4,), ("model",))
+    ps = spec_to_pspec(("embed", "ffn"), DEFAULT_RULES, mesh)  # no 'data' axis
+    assert ps == P(None, "model")
+
+
+def test_batch_pspec_single_and_multipod():
+    assert batch_pspec(_mesh()) == P("data")
+    m3 = _mesh((2, 2, 2), ("pod", "data", "model"))
+    assert batch_pspec(m3) == P(("pod", "data"))
+
+
+def test_tp_only_rules_drop_fsdp():
+    mesh = _mesh()
+    assert spec_to_pspec(("embed", "ffn"), TP_ONLY_RULES, mesh) == P(None, "model")
+
+
+def test_rules_replace():
+    r = DEFAULT_RULES.replace(ffn=("data", "model"))
+    mesh = _mesh()
+    assert spec_to_pspec((None, "ffn"), r, mesh) == P(None, ("data", "model"))
+
+
+@pytest.mark.slow
+def test_end_to_end_sharded_lowering_subprocess():
+    """Reduced-config cell lowers + compiles on a (2,4) fake mesh with the
+    full specs/dryrun machinery — the multi-pod dry-run in miniature."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, jax
+import sys
+sys.path.insert(0, "src")
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_mesh
+from repro.launch.specs import build_cell
+from repro.sharding.partitioning import DEFAULT_RULES
+from repro.sharding.hints import use_hints
+
+mesh = make_mesh((2, 4), ("data", "model"))
+cfg = dataclasses.replace(ARCHS["smollm-135m"].reduced(), dtype="bfloat16", remat=True)
+shape = ShapeConfig("mini_train", seq_len=64, global_batch=4, kind="train")
+cell = build_cell(cfg, shape, mesh, DEFAULT_RULES)
+with mesh, use_hints(mesh, DEFAULT_RULES):
+    c = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate_argnums).lower(*cell.args).compile()
+ma = c.memory_analysis()
+assert ma.temp_size_in_bytes > 0
+txt = c.as_text()
+assert any(k in txt for k in ("all-reduce", "all-gather", "reduce-scatter")), "no collectives?!"
+# decode cell too
+shape_d = ShapeConfig("mini_decode", seq_len=128, global_batch=4, kind="decode")
+cell_d = build_cell(cfg, shape_d, mesh, DEFAULT_RULES)
+with mesh, use_hints(mesh, DEFAULT_RULES):
+    cd = jax.jit(cell_d.step_fn, in_shardings=cell_d.in_shardings,
+                 out_shardings=cell_d.out_shardings,
+                 donate_argnums=cell_d.donate_argnums).lower(*cell_d.args).compile()
+print("OK")
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, cwd=REPO,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "OK" in out.stdout

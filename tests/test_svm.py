@@ -1,0 +1,101 @@
+"""SVM substrate tests: LS-SVM / dual SVC trainers, multiclass, engine."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    approximate,
+    approx_decision_function_checked,
+    decision_function,
+    gamma_max,
+)
+from repro.data.synthetic import make_blobs, make_dataset
+from repro.serve.svm_engine import SVMEngine
+from repro.svm import train_lssvm, train_svc
+from repro.svm.dual import compress_support
+from repro.svm.multiclass import (
+    approx_ovr_predict,
+    approximate_ovr,
+    ovr_predict,
+    train_one_vs_rest,
+)
+
+
+def _blob_task(seed=0, n=240, d=6):
+    X, y = make_blobs(n, d, seed=seed, separation=3.0)
+    n_tr = (2 * n) // 3
+    return (
+        jnp.asarray(X[:n_tr]), jnp.asarray(y[:n_tr]),
+        jnp.asarray(X[n_tr:]), y[n_tr:],
+    )
+
+
+def test_lssvm_accuracy_and_approx_diff():
+    X, y, Xte, yte = _blob_task()
+    gamma = float(gamma_max(X)) * 0.8
+    m = train_lssvm(X, y, jnp.float32(gamma), jnp.float32(10.0))
+    f = np.asarray(decision_function(m, Xte))
+    acc = (np.sign(f) == yte).mean()
+    assert acc >= 0.88
+    am = approximate(m)
+    fh, valid = approx_decision_function_checked(am, Xte)
+    assert np.asarray(valid).all()
+    diff = (np.sign(np.asarray(fh)) != np.sign(f)).mean()
+    assert diff < 0.02  # paper Table 1: <1% typical under the bound
+
+
+def test_svc_sparse_and_consistent():
+    X, y, Xte, yte = _blob_task(seed=5)
+    gamma = float(gamma_max(X)) * 0.8
+    m, mask = train_svc(X, y, jnp.float32(gamma), jnp.float32(1.0), num_steps=800)
+    assert 0 < int(mask.sum()) < len(y)  # sparsity: true SVM behaviour
+    mc = compress_support(m, mask)
+    np.testing.assert_allclose(
+        np.asarray(decision_function(mc, Xte)),
+        np.asarray(decision_function(m, Xte)),
+        rtol=1e-4, atol=1e-4,
+    )
+    acc = (np.sign(np.asarray(decision_function(m, Xte))) == yte).mean()
+    assert acc > 0.85
+
+
+def test_multiclass_ovr_and_approx():
+    rng = np.random.default_rng(3)
+    K, n, d = 3, 120, 5
+    mus = rng.standard_normal((K, d)) * 3
+    X = np.concatenate([rng.standard_normal((n // K, d)) + mus[k] for k in range(K)])
+    y = np.concatenate([np.full(n // K, k) for k in range(K)])
+    X, y = jnp.asarray(X.astype(np.float32)), jnp.asarray(y)
+    gamma = float(gamma_max(X)) * 0.5
+    m = train_one_vs_rest(X, y, K, jnp.float32(gamma), jnp.float32(10.0))
+    pred = np.asarray(ovr_predict(m, X))
+    assert (pred == np.asarray(y)).mean() > 0.9
+    am = approximate_ovr(m)
+    pred_a = np.asarray(approx_ovr_predict(am, X))
+    assert (pred_a != pred).mean() < 0.05
+
+
+def test_engine_fallback_on_bound_violation():
+    X, y, Xte, _ = _blob_task(seed=7)
+    gamma = float(gamma_max(X)) * 0.8
+    m = train_lssvm(X, y, jnp.float32(gamma), jnp.float32(10.0))
+    eng = SVMEngine(approximate(m), m)
+    # in-envelope batch: no fallback
+    f, valid = eng.predict(Xte)
+    assert valid.all() and eng.stats.fallback_instances == 0
+    # out-of-envelope rows: fallback gives the EXACT values
+    Zbad = jnp.concatenate([Xte[:4], 50.0 * Xte[:3]], axis=0)
+    f2, valid2 = eng.predict(Zbad)
+    assert (~valid2).sum() == 3
+    exact = np.asarray(decision_function(m, Zbad))
+    np.testing.assert_allclose(f2[~valid2], exact[~valid2], rtol=1e-4, atol=1e-4)
+    assert eng.stats.fallback_instances == 3
+
+
+def test_paper_dataset_generators():
+    for name in ("a9a", "mnist", "ijcnn1", "sensit", "epsilon"):
+        Xtr, ytr, Xte, yte, spec = make_dataset(name, scale=0.002)
+        assert Xtr.shape[1] == spec.d
+        assert set(np.unique(ytr)) <= {-1.0, 1.0}
+        assert len(Xte) >= 64

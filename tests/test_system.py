@@ -1,0 +1,63 @@
+"""End-to-end system tests: the two pillars, each exercised through their
+full production path in one go."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.core import approximate, decision_function, gamma_max
+from repro.data.loader import lm_token_batches
+from repro.data.synthetic import make_blobs
+from repro.models.transformer import init_cache, init_params
+from repro.serve.decode_step import greedy_generate
+from repro.serve.svm_engine import SVMEngine
+from repro.svm import train_lssvm
+from repro.train import checkpoint as ckpt
+from repro.train.train_step import OptimizerConfig, init_opt_state, make_train_step
+
+
+def test_svm_pillar_end_to_end(tmp_path):
+    """Pillar A: data -> train -> collapse -> bounded serving."""
+    X, y = make_blobs(300, 12, seed=11, separation=2.5)
+    Xtr, ytr, Xte, yte = X[:200], y[:200], X[200:], y[200:]
+    gamma = 0.8 * float(gamma_max(jnp.asarray(X)))
+    model = train_lssvm(jnp.asarray(Xtr), jnp.asarray(ytr),
+                        jnp.float32(gamma), jnp.float32(10.0))
+    engine = SVMEngine(approximate(model), model)
+    labels = engine.predict_labels(jnp.asarray(Xte))
+    acc = (labels == yte).mean()
+    assert acc > 0.85
+    exact = np.sign(np.asarray(decision_function(model, jnp.asarray(Xte))))
+    assert (labels != exact).mean() < 0.02  # paper's contract under the bound
+    assert engine.stats.fallback_rate == 0.0
+
+
+def test_lm_pillar_end_to_end(tmp_path):
+    """Pillar B: init -> train steps -> async ckpt -> restore -> decode."""
+    cfg = dataclasses.replace(
+        ARCHS["qwen2-0.5b"].reduced(), n_layers=2, d_model=64, n_heads=2,
+        n_kv_heads=2, head_dim=32, d_ff=128, vocab_size=256,
+    )
+    ocfg = OptimizerConfig(peak_lr=1e-3, warmup=2, total_steps=10)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(ocfg, params)
+    step_fn = jax.jit(make_train_step(cfg, ocfg))
+    make = lm_token_batches(cfg.vocab_size, batch=4, seq_len=32, seed=7)
+    for s in range(4):
+        batch = {k: jnp.asarray(v) for k, v in make(s).items()}
+        params, opt, metrics = step_fn(params, opt, batch, jnp.int32(s))
+        assert np.isfinite(float(metrics["loss"]))
+
+    saver = ckpt.AsyncCheckpointer(str(tmp_path))
+    saver.save(3, {"params": params})
+    saver.wait()
+    restored = ckpt.restore(str(tmp_path), 3, {"params": params})["params"]
+
+    prompt = jnp.asarray([[1, 2, 3]], jnp.int32)
+    cache = init_cache(cfg, 1, 64, params=restored, dtype=jnp.float32)
+    toks, _ = greedy_generate(cfg, restored, prompt, cache, steps=4)
+    assert toks.shape == (1, 4)
+    assert int(toks.max()) < cfg.vocab_size
