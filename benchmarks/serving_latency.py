@@ -1,0 +1,134 @@
+"""Serving-path latency: engine p50/p99 per shape bucket, and fused
+multi-head vs per-head-vmap scaling.
+
+Two questions, both measured for real on this host:
+
+1. What end-to-end latency does ``SVMEngine.predict`` deliver per shape
+   bucket once warm (zero recompiles)?  p50 is the steady-state cost; p99
+   captures jitter (allocator, host padding, sync).
+2. What does fusing K heads into one stacked-Hessian contraction buy over
+   the seed's K-pass vmap?  Measured at K in {1, 10} on identical data —
+   the ratio is the multiclass serving speedup.
+
+Emits BENCH_serving.json (benchmarks/common.save_json) so later perf PRs
+have a trajectory to compare against.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, save_json, timeit
+from repro.core import approximate, backend, gamma_max
+from repro.core.rbf import SVMModel
+from repro.kernels.quadform.ref import quadform_heads_ref
+from repro.serve.svm_engine import SVMEngine, bucket_size
+
+D = 64
+N_SV = 512
+BATCHES = [1, 8, 32, 64, 256, 1024]
+REPEATS = 200
+HEAD_COUNTS = [1, 10]
+HEADS_BATCH = 1024
+
+
+def _model(seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((N_SV, D)).astype(np.float32) * 0.5
+    ay = rng.standard_normal(N_SV).astype(np.float32)
+    gamma = float(gamma_max(jnp.asarray(X))) * 0.8
+    return SVMModel(
+        X=jnp.asarray(X), alpha_y=jnp.asarray(ay),
+        b=jnp.float32(0.1), gamma=jnp.float32(gamma),
+    )
+
+
+def bench_engine() -> list[dict]:
+    m = _model()
+    eng = SVMEngine(approximate(m), m, min_bucket=32, max_batch=1024)
+    eng.warmup()
+    rng = np.random.default_rng(1)
+    rows = []
+    for n in BATCHES:
+        batches = [rng.standard_normal((n, D)).astype(np.float32) * 0.3
+                   for _ in range(8)]
+        for Z in batches:                                  # warm this bucket
+            eng.predict(Z)
+        times = []
+        for i in range(REPEATS):
+            Z = batches[i % len(batches)]
+            t0 = time.perf_counter()
+            f, _ = eng.predict(Z)                          # includes sync
+            times.append(time.perf_counter() - t0)
+        times = np.asarray(times) * 1e3
+        rows.append({
+            "batch": n,
+            "bucket": bucket_size(n, 32, 1024),
+            "p50_ms": round(float(np.percentile(times, 50)), 4),
+            "p99_ms": round(float(np.percentile(times, 99)), 4),
+            "per_row_us_p50": round(1e3 * float(np.percentile(times, 50)) / n, 2),
+        })
+    assert eng.jit_cache_size() <= 6, "bucket cache must stay bounded"
+    rows_meta = {
+        "jit_variants": eng.jit_cache_size(),
+        "padding_overhead": round(eng.stats.padding_overhead, 4),
+    }
+    print("[serving] engine latency per bucket (warm, zero recompiles)")
+    print(fmt_table(rows, ["batch", "bucket", "p50_ms", "p99_ms", "per_row_us_p50"]))
+    print(f"[serving] {rows_meta}")
+    return rows, rows_meta
+
+
+def bench_heads() -> list[dict]:
+    """Fused stacked-Hessian scoring vs the seed's per-head vmap at equal K."""
+    rng = np.random.default_rng(2)
+    Z = jnp.asarray(rng.standard_normal((HEADS_BATCH, D)).astype(np.float32) * 0.3)
+    rows = []
+    for K in HEAD_COUNTS:
+        Ms = rng.standard_normal((K, D, D)).astype(np.float32) * 0.05
+        M_all = jnp.asarray((Ms + Ms.transpose(0, 2, 1)) / 2)
+        V = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+        c = jnp.asarray(rng.standard_normal(K).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal(K).astype(np.float32))
+        g = jnp.full((K,), 0.05, jnp.float32)
+        msq = jnp.full((K,), 2.0, jnp.float32)
+
+        fused = jax.jit(backend.quadform_heads_xla)
+        unfused = jax.jit(quadform_heads_ref)              # K-pass vmap oracle
+        t_fused = timeit(fused, Z, M_all, V, c, b, g, msq, repeats=20, warmup=3)
+        t_vmap = timeit(unfused, Z, M_all, V, c, b, g, msq, repeats=20, warmup=3)
+        rows.append({
+            "K": K,
+            "batch": HEADS_BATCH,
+            "d": D,
+            "fused_ms": round(1e3 * t_fused, 3),
+            "vmap_ms": round(1e3 * t_vmap, 3),
+            "speedup": round(t_vmap / t_fused, 2),
+        })
+    print("[serving] fused multi-head vs per-head vmap (best-of-20)")
+    print(fmt_table(rows, ["K", "batch", "d", "fused_ms", "vmap_ms", "speedup"]))
+    return rows
+
+
+def run():
+    engine_rows, engine_meta = bench_engine()
+    head_rows = bench_heads()
+    payload = {
+        "host_backend": jax.default_backend(),
+        "svm_backend": backend.resolve(),
+        "model": {"d": D, "n_sv": N_SV},
+        "engine": engine_rows,
+        "engine_meta": engine_meta,
+        "head_scaling": head_rows,
+    }
+    path = save_json("BENCH_serving.json", payload)
+    print(f"[serving] wrote {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -2,6 +2,7 @@
 RBF kernel expansions (exact model -> (c, v, M) quadratic form), with the
 validity bounds of §3.1 and the poly-2 relation of §3.2."""
 
+from repro.core import backend
 from repro.core.rbf import SVMModel, rbf_kernel, decision_function, predict_labels
 from repro.core.maclaurin import (
     ApproxModel,

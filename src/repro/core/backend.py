@@ -1,0 +1,136 @@
+"""Backend dispatch for the SVM prediction hot path.
+
+One process-level decision, made here and nowhere else, of HOW the two
+serving primitives are evaluated:
+
+  * the collapsed quadratic form (Eq 3.8), fused over K heads — the fast
+    path of ``approx_decision_function*``, ``approx_ovr_predict`` and the
+    serving engine;
+  * the exact RBF expansion (Eq 3.2) — the engine's accuracy fallback and
+    every Table-1/2 oracle.
+
+Backends:
+
+  * ``"pallas"`` — the kernels in ``repro.kernels.{quadform,rbf_pred}``:
+    Hessians resident in VMEM, one MXU contraction scoring all K heads per
+    Z tile, streaming SV tiles for the exact path.  Compiled natively on
+    TPU; interpret mode elsewhere (correct but slow — tests only).
+  * ``"xla"``   — algebraically identical single-GEMM jnp formulations
+    that XLA fuses well on CPU/GPU: the (d, K*d) stacked-Hessian operand
+    makes the K-head quadratic term ONE dot_general regardless of K.
+
+Resolution order: ``set_backend(...)`` > ``$REPRO_SVM_BACKEND`` > auto
+(pallas iff the default jax backend is TPU).  The choice is read at trace
+time: functions already jit-compiled keep the backend they were traced
+with — set it before first use (process start / test setup).
+
+All scalars (c, b, gamma, ...) are traced values, so everything here
+composes with outer jits over model pytrees.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quadform.kernel import quadform_heads_pallas
+from repro.kernels.quadform.ref import eq311_valid
+from repro.kernels.rbf_pred.kernel import rbf_predict_pallas
+
+Array = jax.Array
+
+_ENV_VAR = "REPRO_SVM_BACKEND"
+_VALID = ("auto", "pallas", "xla")
+_forced: str | None = None
+
+
+def set_backend(name: str | None) -> str | None:
+    """Force the backend for this process ("pallas" / "xla" / "auto" / None).
+
+    Returns the previous forced value so tests can restore it.
+    """
+    global _forced
+    if name is not None and name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {name!r}")
+    prev = _forced
+    _forced = None if name in (None, "auto") else name
+    return prev
+
+
+def resolve() -> str:
+    """The backend the next trace will use: "pallas" or "xla"."""
+    choice = _forced or os.environ.get(_ENV_VAR, "auto")
+    if choice not in _VALID:
+        raise ValueError(f"${_ENV_VAR} must be one of {_VALID}, got {choice!r}")
+    if choice == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return choice
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------- quadform
+
+
+def quadform_heads_xla(Z, M_all, V, c, b, gamma, msq):
+    """Fused K-head quadratic form as ONE XLA GEMM (not K).
+
+    Identical math to the Pallas kernel: the K Hessians are laid out as a
+    single (d, K*d) operand so the quadratic term of every head comes out
+    of one dot_general, followed by a (n, K) row-dot, the thin Z @ V^T
+    GEMM and the exp/bias/validity epilogue.
+    """
+    n, d = Z.shape
+    k = M_all.shape[0]
+    z_sq = jnp.sum(Z * Z, axis=-1)                          # (n,)
+    m_kd = jnp.transpose(M_all, (1, 0, 2)).reshape(d, k * d)
+    zm = (Z @ m_kd).reshape(n, k, d)                        # ONE GEMM, all heads
+    quad = jnp.einsum("nkd,nd->nk", zm, Z)
+    lin = Z @ V.T                                           # (n, K)
+    env = jnp.exp(-z_sq[:, None] * gamma[None, :])
+    scores = env * (c[None, :] + lin + quad) + b[None, :]
+    return scores, z_sq, eq311_valid(z_sq, gamma, msq)
+
+
+def quadform_heads(Z, M_all, V, c, b, gamma, msq, *, block_n: int = 512):
+    """Dispatching fused K-head scores.
+
+    Z: (n, d); M_all: (K, d, d); V: (K, d); c/b/gamma/msq: (K,).
+    Returns (scores (n, K), z_sq (n,), valid (n, K)) where valid is the
+    per-head Eq 3.11 mask.
+    """
+    if resolve() == "pallas":
+        return quadform_heads_pallas(
+            Z, M_all, V, c, b, gamma, msq,
+            block_n=block_n, interpret=_interpret(),
+        )
+    return quadform_heads_xla(Z, M_all, V, c, b, gamma, msq)
+
+
+# -------------------------------------------------------------- exact RBF
+
+
+def rbf_scores_xla(Z, X, alpha_y, gamma, b):
+    """Exact expansion via the GEMM distance trick (what XLA fuses well)."""
+    sq_z = jnp.sum(Z * Z, axis=-1)[:, None]
+    sq_x = jnp.sum(X * X, axis=-1)[None, :]
+    d2 = jnp.maximum(sq_z + sq_x - 2.0 * (Z @ X.T), 0.0)
+    return jnp.exp(-gamma * d2) @ alpha_y + b
+
+
+def rbf_scores(Z, X, alpha_y, gamma, b, *, block_n: int = 256, block_m: int = 256):
+    """Dispatching exact decision values f(Z) = sum_i a_i K(x_i, z) + b.
+
+    The Pallas path streams SV tiles flash-attention-style (never
+    materializes the (n, n_sv) kernel matrix in HBM).
+    """
+    if resolve() == "pallas":
+        return rbf_predict_pallas(
+            Z, X, alpha_y, gamma, b,
+            block_n=block_n, block_m=block_m, interpret=_interpret(),
+        )
+    return rbf_scores_xla(Z, X, alpha_y, gamma, b)

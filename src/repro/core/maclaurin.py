@@ -24,6 +24,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend
 from repro.core.rbf import SVMModel
 
 Array = jax.Array
@@ -75,21 +76,25 @@ def approximate(model: SVMModel) -> ApproxModel:
     )
 
 
-def _quad_terms(model: ApproxModel, Z: Array) -> tuple[Array, Array]:
-    """Shared core: returns (decision values, ||z||^2 per row)."""
-    z_sq = jnp.sum(Z * Z, axis=-1)                             # (n,)
-    lin = Z @ model.v                                          # (n,)
-    quad = jnp.sum((Z @ model.M) * Z, axis=-1)                 # z^T M z, (n,)
-    g_hat = model.c + lin + quad
-    f_hat = jnp.exp(-model.gamma * z_sq) * g_hat + model.b
-    return f_hat, z_sq
+def _as_heads(model: ApproxModel):
+    """One ApproxModel viewed as a K=1 stack for the fused backend path."""
+    one = lambda x: jnp.reshape(x, (1,))
+    return (
+        model.M[None],
+        model.v[None],
+        one(model.c),
+        one(model.b),
+        one(model.gamma),
+        one(model.max_sv_sq_norm),
+    )
 
 
 @jax.jit
 def approx_decision_function(model: ApproxModel, Z: Array) -> Array:
-    """f_hat(Z) per Eq 3.8. O(d^2) per row."""
-    f_hat, _ = _quad_terms(model, Z)
-    return f_hat
+    """f_hat(Z) per Eq 3.8. O(d^2) per row. Dispatched via repro.core.backend
+    (Pallas kernel on TPU, fused single-GEMM XLA elsewhere)."""
+    scores, _, _ = backend.quadform_heads(Z, *_as_heads(model))
+    return scores[:, 0]
 
 
 @jax.jit
@@ -100,10 +105,8 @@ def approx_decision_function_checked(model: ApproxModel, Z: Array) -> tuple[Arra
     relative error < 3.05% (conservative, via Cauchy-Schwarz). The check is
     free: ||z||^2 is already needed for the exp(-gamma ||z||^2) factor.
     """
-    f_hat, z_sq = _quad_terms(model, Z)
-    rhs = 1.0 / (16.0 * model.gamma**2)
-    valid = model.max_sv_sq_norm * z_sq < rhs
-    return f_hat, valid
+    scores, _, valid = backend.quadform_heads(Z, *_as_heads(model))
+    return scores[:, 0], valid[:, 0]
 
 
 def approx_predict_labels(model: ApproxModel, Z: Array) -> Array:

@@ -1,4 +1,9 @@
-from repro.kernels.quadform.ops import quadform_predict
-from repro.kernels.quadform.ref import quadform_predict_ref
+from repro.kernels.quadform.ops import quadform_predict, quadform_predict_heads
+from repro.kernels.quadform.ref import quadform_heads_ref, quadform_predict_ref
 
-__all__ = ["quadform_predict", "quadform_predict_ref"]
+__all__ = [
+    "quadform_predict",
+    "quadform_predict_heads",
+    "quadform_predict_ref",
+    "quadform_heads_ref",
+]

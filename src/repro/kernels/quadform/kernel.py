@@ -1,17 +1,35 @@
-"""Pallas TPU kernel: batched quadratic-form prediction (Eq 3.8).
+"""Pallas TPU kernel: fused multi-head quadratic-form prediction (Eq 3.8).
 
-    f_hat(z) = exp(-gamma ||z||^2)(c + v^T z + z^T M z) + b
+For K collapsed heads (c_k, v_k, M_k) sharing one input batch Z,
 
-The d x d Hessian M stays RESIDENT in VMEM across the whole batch (it is
-read once from HBM, not once per tile) and each grid step streams one Z tile
-through two MXU contractions (Z M, then row-dot with Z) plus a VPU epilogue.
-This is the TPU analogue of the paper's AVX z^T M z loop.
+    f_k(z) = exp(-gamma_k ||z||^2) (c_k + v_k^T z + z^T M_k z) + b_k
 
-VMEM: M is f32 (d<=2048 -> 16 MB at d=2000; the epsilon data set fits, and
-that is the paper's own largest case). Larger d would tile M over a second
-grid axis; not needed for the paper's regime d << n_sv.
+All K Hessians stay RESIDENT in VMEM as ONE (d, K*d) operand (read once
+from HBM, not once per tile and never once per head).  Each grid step
+streams one Z tile through a single MXU contraction
 
-Outputs both f_hat and ||z||^2 so the Eq 3.11 validity check is free.
+    Z @ M_all -> (BN, K*d)   --reshape-->   (BN, K, d)
+
+followed by a VPU row-dot with Z -> (BN, K) quadratic terms, the thin
+linear GEMM Z @ V^T -> (BN, K), and a fused exp/bias/validity epilogue.
+One pallas_call scores ALL heads: OvR multiclass no longer pays K passes
+over Z nor K separate reads of each d x d Hessian.  K = 1 recovers the
+original single-head kernel exactly.
+
+Scalar head parameters arrive as a (4, K) f32 operand (rows: c, b, gamma,
+||x_M||^2) instead of baked-in Python floats, so the kernel can be traced
+with model parameters as jit ARGUMENTS — the core API jits over the model
+pytree; only the serving engine closes over a fixed model.
+
+Outputs per batch row: (BN, K) scores, ||z||^2 (shared across heads), and
+the per-head Eq 3.11 validity mask — the accuracy-contract check is free
+because ||z||^2 already feeds the exp envelope.
+
+VMEM: the resident operand is K*d^2 f32 — 16 MB at (K=1, d=2000), the
+paper's largest case.  Large K*d^2 (e.g. K=10 at mnist's d=784) exceeds a
+single core's VMEM on real hardware; tiling M_all over a second grid axis
+is the designated follow-up once a TPU host is in the loop (see
+ROADMAP.md "Serving architecture").
 """
 
 from __future__ import annotations
@@ -22,56 +40,104 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.quadform.ref import eq311_valid
 
-def _kernel(z_ref, m_ref, v_ref, o_ref, zsq_ref, *, c: float, b: float, gamma: float):
+
+def _heads_kernel(z_ref, m_ref, v_ref, p_ref, o_ref, zsq_ref, valid_ref,
+                  *, num_heads: int, d_pad: int):
     z = z_ref[...]                            # (BN, d)
-    M = m_ref[...]                            # (d, d)
-    v = v_ref[...]                            # (d,)
+    m = m_ref[...]                            # (d, K*d)  resident
+    v = v_ref[...]                            # (K, d)
+    p = p_ref[...]                            # (4, K): c, b, gamma, ||x_M||^2
+    c, bias, gamma, msq = p[0], p[1], p[2], p[3]
+
     z_sq = jnp.sum(z * z, axis=-1)            # (BN,)
     zm = jax.lax.dot_general(
-        z, M, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )                                         # (BN, d) -- MXU
-    quad = jnp.sum(zm * z, axis=-1)           # (BN,)   -- VPU row-dot
-    lin = z @ v                               # (BN,)
-    g_hat = c + lin + quad
-    o_ref[...] = jnp.exp(-gamma * z_sq) * g_hat + b
+        z, m, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                         # (BN, K*d) -- ONE MXU contraction
+    zm = zm.reshape(z.shape[0], num_heads, d_pad)
+    quad = jnp.sum(zm * z[:, None, :], axis=-1)            # (BN, K) row-dot
+    lin = jax.lax.dot_general(
+        z, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                         # (BN, K)
+    g_hat = c[None, :] + lin + quad
+    env = jnp.exp(-z_sq[:, None] * gamma[None, :])
+    o_ref[...] = env * g_hat + bias[None, :]
     zsq_ref[...] = z_sq
+    valid_ref[...] = eq311_valid(z_sq, gamma, msq).astype(jnp.float32)
+
+
+def quadform_heads_pallas(
+    Z: jax.Array,
+    M_all: jax.Array,
+    V: jax.Array,
+    c: jax.Array,
+    b: jax.Array,
+    gamma: jax.Array,
+    msq: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Fused K-head scores. Z: (n, d), M_all: (K, d, d), V: (K, d);
+    c/b/gamma/msq: (K,). Returns (scores (n, K), z_sq (n,), valid (n, K))."""
+    n, d = Z.shape
+    k = M_all.shape[0]
+    d_pad = max(128, -(-d // 128) * 128)
+    n_pad = -(-n // block_n) * block_n
+    Zp = jnp.pad(Z.astype(jnp.float32), ((0, n_pad - n), (0, d_pad - d)))
+    Mp = jnp.pad(M_all.astype(jnp.float32), ((0, 0), (0, d_pad - d), (0, d_pad - d)))
+    # (K, d, d) -> (d, K*d) with m[:, k*d:(k+1)*d] = M_k, so the reshape of
+    # Z @ m back to (BN, K, d) groups columns per head.
+    m_kd = jnp.transpose(Mp, (1, 0, 2)).reshape(d_pad, k * d_pad)
+    Vp = jnp.pad(V.astype(jnp.float32), ((0, 0), (0, d_pad - d)))
+    params = jnp.stack(
+        [jnp.ravel(c), jnp.ravel(b), jnp.ravel(gamma), jnp.ravel(msq)]
+    ).astype(jnp.float32)                                  # (4, K)
+
+    scores, z_sq, valid = pl.pallas_call(
+        functools.partial(_heads_kernel, num_heads=k, d_pad=d_pad),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((d_pad, k * d_pad), lambda i: (0, 0)),   # M_all resident
+            pl.BlockSpec((k, d_pad), lambda i: (0, 0)),
+            pl.BlockSpec((4, k), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Zp, m_kd, Vp, params)
+    return scores[:n], z_sq[:n], valid[:n] > 0.0
 
 
 def quadform_predict_pallas(
     Z: jax.Array,
     M: jax.Array,
     v: jax.Array,
-    c: float,
-    b: float,
-    gamma: float,
+    c,
+    b,
+    gamma,
     *,
     block_n: int = 512,
     interpret: bool = False,
 ):
-    n, d = Z.shape
-    d_pad = max(128, -(-d // 128) * 128)
-    n_pad = -(-n // block_n) * block_n
-    Zp = jnp.pad(Z, ((0, n_pad - n), (0, d_pad - d)))
-    Mp = jnp.pad(M, ((0, d_pad - d), (0, d_pad - d)))
-    vp = jnp.pad(v, (0, d_pad - d))
+    """Single-head wrapper (the original kernel API): K = 1 of the fused path.
 
-    out, z_sq = pl.pallas_call(
-        functools.partial(_kernel, c=float(c), b=float(b), gamma=float(gamma)),
-        grid=(n_pad // block_n,),
-        in_specs=[
-            pl.BlockSpec((block_n, d_pad), lambda i: (i, 0)),
-            pl.BlockSpec((d_pad, d_pad), lambda i: (0, 0)),   # M resident
-            pl.BlockSpec((d_pad,), lambda i: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
-            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
-        ],
-        interpret=interpret,
-    )(Zp.astype(jnp.float32), Mp.astype(jnp.float32), vp.astype(jnp.float32))
-    return out[:n], z_sq[:n]
+    Returns (f_hat (n,), z_sq (n,)).  c/b/gamma may be Python floats or
+    traced scalars.
+    """
+    one = lambda x: jnp.reshape(jnp.asarray(x, jnp.float32), (1,))
+    scores, z_sq, _ = quadform_heads_pallas(
+        Z, M[None], v[None], one(c), one(b), one(gamma), one(0.0),
+        block_n=block_n, interpret=interpret,
+    )
+    return scores[:, 0], z_sq

@@ -1,4 +1,15 @@
-"""Jit'd public wrapper for the quadratic-form prediction kernel."""
+"""Jit'd public wrappers (shims) for the quadratic-form prediction kernel.
+
+These are thin: the actual Pallas-vs-XLA routing lives in
+``repro.core.backend`` so core, the serving engine and the benchmarks all
+share one implementation of the math.  ``use_pallas`` is kept for explicit
+A/B benchmarking (Table-2 style comparisons) and pins the path regardless
+of the process-level backend choice.
+
+Unlike the seed version, model scalars (c, b, gamma) are TRACED arguments,
+not static — the kernels take them as array operands, so these wrappers
+compose with outer jits over model pytrees without retracing per value.
+"""
 
 from __future__ import annotations
 
@@ -6,22 +17,42 @@ from functools import partial
 
 import jax
 
-from repro.kernels.quadform.kernel import quadform_predict_pallas
-from repro.kernels.quadform.ref import quadform_predict_ref
+from repro.kernels.quadform.kernel import (
+    quadform_heads_pallas,
+    quadform_predict_pallas,
+)
+from repro.kernels.quadform.ref import quadform_heads_ref, quadform_predict_ref
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _off_tpu() -> bool:
+    return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("c", "b", "gamma", "use_pallas", "block_n"))
+@partial(jax.jit, static_argnames=("use_pallas", "block_n"))
 def quadform_predict(
-    Z, M, v, c: float, b: float, gamma: float,
+    Z, M, v, c, b, gamma,
     use_pallas: bool = True, block_n: int = 512,
 ):
-    """Returns (f_hat, z_sq). See kernel.py for the TPU mapping."""
+    """Single-head (f_hat, z_sq). K=1 slice of the fused multi-head kernel."""
     if use_pallas:
         return quadform_predict_pallas(
-            Z, M, v, c, b, gamma, block_n=block_n, interpret=_on_cpu()
+            Z, M, v, c, b, gamma, block_n=block_n, interpret=_off_tpu()
         )
     return quadform_predict_ref(Z, M, v, c, b, gamma)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "block_n"))
+def quadform_predict_heads(
+    Z, M_all, V, c, b, gamma, msq,
+    use_pallas: bool = True, block_n: int = 512,
+):
+    """Fused K-head (scores (n, K), z_sq (n,), valid (n, K)).
+
+    ``use_pallas=False`` runs the unfused per-head vmap oracle — the
+    baseline the fused path is benchmarked against.
+    """
+    if use_pallas:
+        return quadform_heads_pallas(
+            Z, M_all, V, c, b, gamma, msq, block_n=block_n, interpret=_off_tpu()
+        )
+    return quadform_heads_ref(Z, M_all, V, c, b, gamma, msq)

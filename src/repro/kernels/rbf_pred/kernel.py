@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(z_ref, x_ref, a_ref, o_ref, *, gamma: float, bias: float, m_tiles: int):
+def _kernel(z_ref, x_ref, a_ref, p_ref, o_ref, *, m_tiles: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -34,6 +34,8 @@ def _kernel(z_ref, x_ref, a_ref, o_ref, *, gamma: float, bias: float, m_tiles: i
     z = z_ref[...]                      # (BN, d)
     x = x_ref[...]                      # (BM, d)
     a = a_ref[...]                      # (BM,)
+    p = p_ref[...]                      # (2,): gamma, bias — traced operands,
+    gamma, bias = p[0], p[1]            # not baked Python floats (jit-able)
     z_sq = jnp.sum(z * z, axis=-1)      # (BN,)
     x_sq = jnp.sum(x * x, axis=-1)      # (BM,)
     # MXU GEMM + VPU epilogue, all in VMEM.
@@ -72,20 +74,22 @@ def rbf_predict_pallas(
     Zp = jnp.pad(Z, ((0, n_pad - n), (0, d_pad - d)))
     Xp = jnp.pad(X, ((0, m_pad - m), (0, d_pad - d)))
     ap = jnp.pad(alpha_y, (0, m_pad - m))
+    params = jnp.stack(
+        [jnp.asarray(gamma, jnp.float32), jnp.asarray(b, jnp.float32)]
+    )                                                       # (2,)
 
     n_tiles, m_tiles = n_pad // block_n, m_pad // block_m
     out = pl.pallas_call(
-        functools.partial(
-            _kernel, gamma=float(gamma), bias=float(b), m_tiles=m_tiles
-        ),
+        functools.partial(_kernel, m_tiles=m_tiles),
         grid=(n_tiles, m_tiles),
         in_specs=[
             pl.BlockSpec((block_n, d_pad), lambda i, j: (i, 0)),
             pl.BlockSpec((block_m, d_pad), lambda i, j: (j, 0)),
             pl.BlockSpec((block_m,), lambda i, j: (j,)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
         interpret=interpret,
-    )(Zp.astype(jnp.float32), Xp.astype(jnp.float32), ap.astype(jnp.float32))
+    )(Zp.astype(jnp.float32), Xp.astype(jnp.float32), ap.astype(jnp.float32), params)
     return out[:n]

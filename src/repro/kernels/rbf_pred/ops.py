@@ -1,9 +1,13 @@
-"""Jit'd public wrapper for the exact-RBF prediction kernel.
+"""Jit'd public wrapper (shim) for the exact-RBF prediction kernel.
 
 On CPU (this container) the Pallas body runs in interpret mode; on TPU the
 same BlockSpecs compile natively. ``use_pallas=False`` falls back to the
 jnp oracle (what XLA fuses on its own) — the Table-2 benchmark compares
-both.
+both.  Process-level Pallas-vs-XLA routing for the serving path lives in
+``repro.core.backend``; this shim pins the path explicitly for A/B runs.
+
+``gamma`` and ``b`` are TRACED arguments (array operands of the kernel),
+so this composes with outer jits over SVMModel pytrees without retracing.
 """
 
 from __future__ import annotations
@@ -16,17 +20,17 @@ from repro.kernels.rbf_pred.kernel import rbf_predict_pallas
 from repro.kernels.rbf_pred.ref import rbf_predict_ref
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _off_tpu() -> bool:
+    return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("gamma", "b", "use_pallas", "block_n", "block_m"))
+@partial(jax.jit, static_argnames=("use_pallas", "block_n", "block_m"))
 def rbf_predict(
     Z,
     X,
     alpha_y,
-    gamma: float,
-    b: float,
+    gamma,
+    b,
     use_pallas: bool = True,
     block_n: int = 256,
     block_m: int = 256,
@@ -34,6 +38,6 @@ def rbf_predict(
     if use_pallas:
         return rbf_predict_pallas(
             Z, X, alpha_y, gamma, b,
-            block_n=block_n, block_m=block_m, interpret=_on_cpu(),
+            block_n=block_n, block_m=block_m, interpret=_off_tpu(),
         )
     return rbf_predict_ref(Z, X, alpha_y, gamma, b)

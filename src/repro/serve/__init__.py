@@ -1,3 +1,11 @@
 from repro.serve.decode_step import make_serve_step, make_prefill_step
+from repro.serve.svm_engine import EngineResult, EngineStats, SVMEngine, bucket_size
 
-__all__ = ["make_serve_step", "make_prefill_step"]
+__all__ = [
+    "make_serve_step",
+    "make_prefill_step",
+    "SVMEngine",
+    "EngineResult",
+    "EngineStats",
+    "bucket_size",
+]

@@ -31,6 +31,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 MeshAxes = tuple[str, ...] | str | None
 
 
+def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Version-compatible AbstractMesh constructor.
+
+    jax >= 0.5 takes (axis_sizes, axis_names); 0.4.x takes a single tuple
+    of (name, size) pairs. Rule/spec logic only needs names and sizes, not
+    real devices, so tests build meshes through this.
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
 @dataclasses.dataclass(frozen=True)
 class AxisRules:
     """logical axis name -> mesh axis (or tuple of mesh axes)."""

@@ -4,6 +4,10 @@ The paper classifies "class k versus others" for mnist (class 1) and sensit
 (class 3). We provide both that binary slicing and a full OvR ensemble whose
 per-class models share X, so the Maclaurin collapse produces one
 (c, v, M) triple per class — still O(K d^2) total, independent of n_sv.
+
+Prediction is FUSED across heads: the K stacked Hessians are evaluated by
+one backend call (one Pallas pallas_call / one XLA GEMM — not K), and the
+exact OvR path shares a single kernel-matrix GEMM across all K heads.
 """
 
 from __future__ import annotations
@@ -11,8 +15,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.maclaurin import ApproxModel, approximate, approx_decision_function
-from repro.core.rbf import SVMModel, decision_function
+from repro.core import backend
+from repro.core.maclaurin import ApproxModel, approximate
+from repro.core.rbf import SVMModel, rbf_kernel
 from repro.svm.lssvm import train_lssvm
 
 Array = jax.Array
@@ -38,14 +43,17 @@ def train_one_vs_rest(
     )
 
 
+@jax.jit
+def ovr_scores(model: SVMModel, Z: Array) -> Array:
+    """Exact per-class decision values (n, K): ONE kernel-matrix GEMM shared
+    by all heads (K[i, j] is class-independent; only alpha differs)."""
+    K_mat = rbf_kernel(Z, model.X, model.gamma)          # (n, n_sv), shared
+    return K_mat @ model.alpha_y.T + model.b[None, :]    # (n, K)
+
+
 def ovr_predict(model: SVMModel, Z: Array) -> Array:
     """argmax over per-class decision values."""
-    def one(ay, b):
-        m = SVMModel(X=model.X, alpha_y=ay, b=b, gamma=model.gamma)
-        return decision_function(m, Z)
-
-    scores = jax.vmap(one)(model.alpha_y, model.b)  # (K, n)
-    return jnp.argmax(scores, axis=0)
+    return jnp.argmax(ovr_scores(model, Z), axis=-1)
 
 
 def approximate_ovr(model: SVMModel) -> ApproxModel:
@@ -57,6 +65,16 @@ def approximate_ovr(model: SVMModel) -> ApproxModel:
     return jax.vmap(one)(model.alpha_y, model.b)
 
 
+@jax.jit
+def approx_ovr_scores(approx: ApproxModel, Z: Array) -> Array:
+    """Fused K-head scores (n, K): one backend call for all heads."""
+    scores, _, _ = backend.quadform_heads(
+        Z, approx.M, approx.v, approx.c, approx.b, approx.gamma,
+        approx.max_sv_sq_norm,
+    )
+    return scores
+
+
+@jax.jit
 def approx_ovr_predict(approx: ApproxModel, Z: Array) -> Array:
-    scores = jax.vmap(lambda m: approx_decision_function(m, Z))(approx)  # (K, n)
-    return jnp.argmax(scores, axis=0)
+    return jnp.argmax(approx_ovr_scores(approx, Z), axis=-1)

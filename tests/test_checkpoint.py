@@ -56,8 +56,9 @@ def test_restore_with_resharding(tmp_path):
     """Elastic-remesh path: restore device_puts onto provided shardings."""
     t = _tree()
     ckpt.save(str(tmp_path), 3, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda l: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()), t
     )

@@ -1,0 +1,189 @@
+"""Fused multi-head serving path: kernel vs per-head oracle, backend
+dispatch, engine shape-bucketing (zero recompiles within a bucket),
+deferred sync, and the mesh-sharded exact fallback."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import approximate, backend, decision_function, gamma_max
+from repro.core.maclaurin import ApproxModel
+from repro.data.synthetic import make_blobs
+from repro.kernels.quadform.kernel import quadform_heads_pallas
+from repro.kernels.quadform.ref import quadform_heads_ref
+from repro.serve.svm_engine import SVMEngine, bucket_size
+from repro.svm import train_lssvm
+from repro.svm.multiclass import (
+    approx_ovr_predict,
+    approximate_ovr,
+    ovr_predict,
+    train_one_vs_rest,
+)
+
+
+def _random_heads(K, d, seed=0, gamma=0.05):
+    rng = np.random.default_rng(seed)
+    M = rng.standard_normal((K, d, d)).astype(np.float32) * 0.1
+    M_all = jnp.asarray((M + M.transpose(0, 2, 1)) / 2)
+    V = jnp.asarray(rng.standard_normal((K, d)).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal(K).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(K).astype(np.float32))
+    g = jnp.full((K,), gamma, jnp.float32)
+    msq = jnp.full((K,), 2.0, jnp.float32)
+    return M_all, V, c, b, g, msq
+
+
+# ------------------------------------------------- fused kernel vs vmap oracle
+
+
+@pytest.mark.parametrize("K", [1, 3, 10])
+@pytest.mark.parametrize("n,d", [(5, 7), (64, 128), (513, 60)])
+def test_fused_heads_pallas_matches_vmap_reference(K, n, d):
+    """Padded-n (513), padded-d (7, 60) and aligned (128) edge shapes."""
+    rng = np.random.default_rng(K * n + d)
+    Z = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32) * 0.5)
+    heads = _random_heads(K, d, seed=K)
+    s_ref, zsq_ref, v_ref = quadform_heads_ref(Z, *heads)
+    s, zsq, v = quadform_heads_pallas(Z, *heads, block_n=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(zsq), np.asarray(zsq_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+
+
+@pytest.mark.parametrize("K", [1, 3, 10])
+def test_fused_heads_xla_matches_vmap_reference(K):
+    """The CPU serving path (single stacked-Hessian GEMM) is equivalent too."""
+    n, d = 130, 33
+    rng = np.random.default_rng(K)
+    Z = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32) * 0.5)
+    heads = _random_heads(K, d, seed=K + 1)
+    s_ref, _, v_ref = quadform_heads_ref(Z, *heads)
+    s, _, v = backend.quadform_heads_xla(Z, *heads)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+
+
+def test_fused_xla_gemm_count_independent_of_heads():
+    """The fused path issues ONE stacked contraction, not K: the number of
+    dot_generals in the jaxpr is identical for K=1 and K=10."""
+    def count_dots(K):
+        d = 16
+        Z = jnp.zeros((8, d))
+        heads = _random_heads(K, d)
+        jaxpr = jax.make_jaxpr(backend.quadform_heads_xla)(Z, *heads)
+        return str(jaxpr).count("dot_general")
+
+    assert count_dots(10) == count_dots(1)
+
+
+def test_backend_dispatch_override():
+    prev = backend.set_backend("pallas")
+    try:
+        assert backend.resolve() == "pallas"
+        backend.set_backend("xla")
+        assert backend.resolve() == "xla"
+        with pytest.raises(ValueError):
+            backend.set_backend("cuda")
+    finally:
+        backend.set_backend(prev or "auto")
+
+
+# --------------------------------------------------------------- the engine
+
+
+def _binary_engine(mesh=None, **kw):
+    X, y = make_blobs(240, 6, seed=7, separation=3.0)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    gamma = float(gamma_max(X)) * 0.8
+    m = train_lssvm(X, y, jnp.float32(gamma), jnp.float32(10.0))
+    return SVMEngine(approximate(m), m, mesh=mesh, **kw), m, X
+
+
+def test_bucket_size_policy():
+    assert bucket_size(1) == 32
+    assert bucket_size(32) == 32
+    assert bucket_size(33) == 64
+    assert bucket_size(100) == 128
+    assert bucket_size(10_000, max_batch=8192) == 8192
+
+
+def test_engine_zero_recompiles_within_bucket():
+    """Repeated batches inside one bucket never grow the jit cache."""
+    eng, _, X = _binary_engine()
+    rng = np.random.default_rng(0)
+    for n in (1, 3, 9, 17, 31, 32):
+        eng.predict(rng.standard_normal((n, 6)).astype(np.float32))
+    assert eng.jit_cache_size() == 1
+    eng.predict(rng.standard_normal((33, 6)).astype(np.float32))  # next bucket
+    assert eng.jit_cache_size() == 2
+    for n in (2, 40, 20, 64):
+        eng.predict(rng.standard_normal((n, 6)).astype(np.float32))
+    assert eng.jit_cache_size() == 2                       # steady state
+    assert eng.stats.bucket_hits.keys() == {32, 64}
+
+
+def test_engine_warmup_bounds_cache():
+    eng, _, _ = _binary_engine(min_bucket=32, max_batch=128)
+    n_variants = eng.warmup()
+    assert n_variants == 3                                  # 32, 64, 128
+    eng.predict(np.zeros((5, 6), np.float32))
+    eng.predict(np.zeros((300, 6), np.float32))             # chunked: 128-buckets
+    assert eng.jit_cache_size() == 3                        # nothing new compiled
+
+
+def test_engine_chunks_oversized_batches():
+    from repro.core import approx_decision_function
+
+    eng, m, X = _binary_engine(min_bucket=32, max_batch=64)
+    Z = jnp.concatenate([X, X], axis=0)[:150]
+    f, valid = eng.predict(Z)                  # 3 chunks: 64 + 64 + 22
+    assert f.shape == (150,) and valid.all()
+    ref = np.asarray(approx_decision_function(eng.approx, Z))
+    np.testing.assert_allclose(f, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_fallback_exact_and_deferred_sync():
+    eng, m, X = _binary_engine()
+    Zbad = jnp.concatenate([X[:4], 50.0 * X[:3]], axis=0)
+    r = eng.submit(Zbad)                                    # no sync yet
+    r.block_until_ready()
+    f, valid = r.values, r.valid
+    assert (~valid).sum() == 3
+    exact = np.asarray(decision_function(m, Zbad))
+    np.testing.assert_allclose(f[~valid], exact[~valid], rtol=1e-4, atol=1e-4)
+    assert eng.stats.fallback_instances == 3
+    labels = r.labels
+    assert set(np.unique(labels)) <= {-1, 1}
+
+
+def test_engine_mesh_sharded_fallback():
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    eng, m, X = _binary_engine(mesh=mesh)
+    Zbad = jnp.concatenate([X[:4], 50.0 * X[:3]], axis=0)
+    f, valid = eng.predict(Zbad)
+    exact = np.asarray(decision_function(m, Zbad))
+    np.testing.assert_allclose(f[~valid], exact[~valid], rtol=1e-4, atol=1e-4)
+
+
+def test_engine_multiclass_fused_argmax():
+    rng = np.random.default_rng(3)
+    K, n, d = 3, 120, 5
+    mus = rng.standard_normal((K, d)) * 3
+    X = np.concatenate([rng.standard_normal((n // K, d)) + mus[k] for k in range(K)])
+    y = np.concatenate([np.full(n // K, k) for k in range(K)])
+    X, y = jnp.asarray(X.astype(np.float32)), jnp.asarray(y)
+    gamma = float(gamma_max(X)) * 0.5
+    m = train_one_vs_rest(X, y, K, jnp.float32(gamma), jnp.float32(10.0))
+    am = approximate_ovr(m)
+    eng = SVMEngine(am, m)
+    labels = eng.predict_labels(X)
+    np.testing.assert_array_equal(labels, np.asarray(approx_ovr_predict(am, X)))
+    scores, valid = eng.predict(X)
+    assert scores.shape == (n, K)
+    # fused exact OvR (shared kernel-matrix GEMM) agrees with the engine's
+    # fallback labels on out-of-envelope rows
+    Zbad = 50.0 * X[:3]
+    bad_labels = eng.predict_labels(Zbad)
+    np.testing.assert_array_equal(bad_labels, np.asarray(ovr_predict(m, Zbad)))

@@ -13,6 +13,7 @@ from repro.sharding.partitioning import (
     AxisRules,
     DEFAULT_RULES,
     TP_ONLY_RULES,
+    abstract_mesh,
     batch_pspec,
     spec_to_pspec,
 )
@@ -22,7 +23,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def _mesh(shape=(2, 2), axes=("data", "model")):
     # AbstractMesh: rule/spec logic only needs names+sizes, not real devices
-    return jax.sharding.AbstractMesh(shape, axes)
+    return abstract_mesh(shape, axes)
 
 
 def test_spec_to_pspec_basic():
