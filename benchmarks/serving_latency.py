@@ -1,7 +1,8 @@
-"""Serving-path latency: engine p50/p99 per shape bucket, and fused
-multi-head vs per-head-vmap scaling.
+"""Serving-path latency: engine p50/p99 per shape bucket, fused multi-head
+vs per-head-vmap scaling, and the per-bucket block-size sweep that feeds
+the checked-in tuning table.
 
-Two questions, both measured for real on this host:
+Three questions, all measured for real on this host:
 
 1. What end-to-end latency does ``SVMEngine.predict`` deliver per shape
    bucket once warm (zero recompiles)?  p50 is the steady-state cost; p99
@@ -9,6 +10,15 @@ Two questions, both measured for real on this host:
 2. What does fusing K heads into one stacked-Hessian contraction buy over
    the seed's K-pass vmap?  Measured at K in {1, 10} on identical data —
    the ratio is the multiclass serving speedup.
+3. Which tile sizes are fastest per shape bucket?  The sweep times the
+   DISPATCHED serving primitives over candidate ``TileConfig``s (default
+   included, so the recorded pick can only tie or beat it), records the
+   winners through ``repro.kernels.common.autotune`` and persists them to
+   the checked-in ``tuning_table.json`` the engine reads back at warmup.
+   On non-TPU hosts the dispatched path is XLA and ignores block sizes —
+   the spread there is timing noise and the table entry simply pins the
+   default-equivalent winner; on a TPU host the same sweep produces real
+   per-bucket Pallas tilings.
 
 Emits BENCH_serving.json (benchmarks/common.save_json) so later perf PRs
 have a trajectory to compare against.
@@ -25,6 +35,7 @@ import jax.numpy as jnp
 from benchmarks.common import fmt_table, save_json, timeit
 from repro.core import approximate, backend, gamma_max
 from repro.core.rbf import SVMModel
+from repro.kernels.common import TileConfig, autotune, tuning
 from repro.kernels.quadform.ref import quadform_heads_ref
 from repro.serve.svm_engine import SVMEngine, bucket_size
 
@@ -34,6 +45,9 @@ BATCHES = [1, 8, 32, 64, 256, 1024]
 REPEATS = 200
 HEAD_COUNTS = [1, 10]
 HEADS_BATCH = 1024
+SWEEP_BUCKETS = [32, 256, 1024]
+SWEEP_BLOCK_N = [64, 128, 256, 512]
+SWEEP_BLOCK_M = [64, 128, 256, 512]
 
 
 def _model(seed=0):
@@ -114,9 +128,89 @@ def bench_heads() -> list[dict]:
     return rows
 
 
+def bench_block_sweep() -> list[dict]:
+    """Per-bucket TileConfig sweep through the dispatched serving primitives.
+
+    Every row records the tuned pick next to the old fixed default for the
+    same bucket; because the default is always among the candidates, the
+    tuned pick is never slower by construction. Winners are persisted to
+    the kernels/common tuning table (the file the engine's per-bucket
+    resolution reads back).
+    """
+    m = _model()
+    am = approximate(m)
+    one = lambda x: jnp.reshape(jnp.asarray(x, jnp.float32), (1,))
+    M_all, V = am.M[None], am.v[None]
+    scalars = (one(am.c), one(am.b), one(am.gamma), one(am.max_sv_sq_norm))
+    rng = np.random.default_rng(3)
+    rows = []
+
+    def record_row(kernel, bucket, key, winner, sweep):
+        default = tuning.DEFAULTS[kernel]
+        default_ms = next(r["ms"] for r in sweep if r["config"] == default)
+        tuned_ms = min(r["ms"] for r in sweep)
+        rows.append({
+            "kernel": kernel,
+            "bucket": bucket,
+            "key": key,
+            "tuned": {k: v for k, v in winner.to_json().items()
+                      if getattr(default, k) != v} or {"(default)": True},
+            "tuned_ms": round(tuned_ms, 4),
+            "default_ms": round(default_ms, 4),
+            "candidates": [
+                {"block_n": r["config"].block_n, "block_m": r["config"].block_m,
+                 "ms": round(r["ms"], 4)}
+                for r in sweep
+            ],
+        })
+
+    for bucket in SWEEP_BUCKETS:
+        Z = jnp.asarray(rng.standard_normal((bucket, D)).astype(np.float32) * 0.3)
+        key = tuning.shape_key(d=D, k=1, n=bucket)
+
+        def build(cfg):
+            step = jax.jit(
+                lambda Zb: backend.quadform_heads(Zb, M_all, V, *scalars, config=cfg)
+            )
+            return lambda: step(Z)
+
+        # clamp candidates to the bucket (dedup) so small buckets still get
+        # a real sweep instead of only the appended default
+        cands = [TileConfig(block_n=bn)
+                 for bn in sorted({min(bn, bucket) for bn in SWEEP_BLOCK_N})]
+        winner, sweep = autotune.autotune(
+            "quadform", key, build, cands, source="benchmarks/serving_latency.py"
+        )
+        record_row("quadform", bucket, key, winner, sweep)
+
+    # exact-fallback path: SV stream tile size at one representative bucket
+    n_fb = 256
+    Zfb = jnp.asarray(rng.standard_normal((n_fb, D)).astype(np.float32) * 0.3)
+    key = tuning.shape_key(d=D, m=N_SV, n=n_fb)
+
+    def build_rbf(cfg):
+        step = jax.jit(
+            lambda Zb: backend.rbf_scores(Zb, m.X, m.alpha_y, m.gamma, m.b, config=cfg)
+        )
+        return lambda: step(Zfb)
+
+    cands = [TileConfig(block_n=256, block_m=bm) for bm in SWEEP_BLOCK_M]
+    winner, sweep = autotune.autotune(
+        "rbf_pred", key, build_rbf, cands, source="benchmarks/serving_latency.py"
+    )
+    record_row("rbf_pred", n_fb, key, winner, sweep)
+
+    table_path = tuning.save_table()
+    print("[serving] block-size sweep (tuned pick vs old fixed default)")
+    print(fmt_table(rows, ["kernel", "bucket", "tuned", "tuned_ms", "default_ms"]))
+    print(f"[serving] tuning table -> {table_path}")
+    return rows
+
+
 def run():
     engine_rows, engine_meta = bench_engine()
     head_rows = bench_heads()
+    sweep_rows = bench_block_sweep()
     payload = {
         "host_backend": jax.default_backend(),
         "svm_backend": backend.resolve(),
@@ -124,6 +218,15 @@ def run():
         "engine": engine_rows,
         "engine_meta": engine_meta,
         "head_scaling": head_rows,
+        "block_sweep": {
+            "note": (
+                "tuned = argmin over candidates INCLUDING the default, so "
+                "tuned_ms <= default_ms by construction; on non-TPU hosts "
+                "the dispatched path is XLA and the spread is noise"
+            ),
+            "platform": tuning.platform(),
+            "rows": sweep_rows,
+        },
     }
     path = save_json("BENCH_serving.json", payload)
     print(f"[serving] wrote {path}")

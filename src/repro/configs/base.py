@@ -51,8 +51,9 @@ class ModelConfig:
     attention_impl: str = "blockwise"   # blockwise (jnp, GSPMD-shardable) |
     # flash (fused Pallas kernel kernels/flash_attn — single-device or
     # shard_map contexts; removes the score-slab HBM term entirely)
-    kv_cache_dtype: str = "bfloat16"    # bfloat16 | int8 (per-token-per-head
-    # symmetric quantization; ~2x on the decode memory term — §Perf)
+    kv_cache_dtype: str = "bfloat16"    # bfloat16 | int8 (grouped sub-channel
+    # symmetric scales, one per (token, head, KV_QUANT_GROUP channels) —
+    # see models/attention.py; ~2x on the decode memory term — §Perf)
 
     @property
     def hd(self) -> int:

@@ -24,6 +24,12 @@ Resolution order: ``set_backend(...)`` > ``$REPRO_SVM_BACKEND`` > auto
 time: functions already jit-compiled keep the backend they were traced
 with — set it before first use (process start / test setup).
 
+Tile sizes travel as a ``TileConfig`` from ``repro.kernels.common``:
+callers that know their shape bucket (the serving engine) pass a resolved
+config; ``config=None`` resolves the measured-or-default entry for the
+operand shapes from the tuning registry right here, so every dispatch —
+not just the engine's — benefits from the checked-in tuning table.
+
 All scalars (c, b, gamma, ...) are traced values, so everything here
 composes with outer jits over model pytrees.
 """
@@ -35,6 +41,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import TileConfig, tuning
 from repro.kernels.quadform.kernel import quadform_heads_pallas
 from repro.kernels.quadform.ref import eq311_valid
 from repro.kernels.rbf_pred.kernel import rbf_predict_pallas
@@ -96,17 +103,25 @@ def quadform_heads_xla(Z, M_all, V, c, b, gamma, msq):
     return scores, z_sq, eq311_valid(z_sq, gamma, msq)
 
 
-def quadform_heads(Z, M_all, V, c, b, gamma, msq, *, block_n: int = 512):
+def quadform_heads(Z, M_all, V, c, b, gamma, msq, *, config: TileConfig | None = None):
     """Dispatching fused K-head scores.
 
     Z: (n, d); M_all: (K, d, d); V: (K, d); c/b/gamma/msq: (K,).
     Returns (scores (n, K), z_sq (n,), valid (n, K)) where valid is the
-    per-head Eq 3.11 mask.
+    per-head Eq 3.11 mask. ``config=None`` resolves the tuned (or default)
+    ``TileConfig`` for this (d, K, n) bucket from the tuning registry.
     """
+    if config is None:
+        config = tuning.lookup(
+            "quadform",
+            tuning.shape_key(
+                d=Z.shape[1], k=M_all.shape[0], n=tuning.bucket(Z.shape[0])
+            ),
+        )
     if resolve() == "pallas":
         return quadform_heads_pallas(
             Z, M_all, V, c, b, gamma, msq,
-            block_n=block_n, interpret=_interpret(),
+            config=config, interpret=_interpret(),
         )
     return quadform_heads_xla(Z, M_all, V, c, b, gamma, msq)
 
@@ -122,15 +137,22 @@ def rbf_scores_xla(Z, X, alpha_y, gamma, b):
     return jnp.exp(-gamma * d2) @ alpha_y + b
 
 
-def rbf_scores(Z, X, alpha_y, gamma, b, *, block_n: int = 256, block_m: int = 256):
+def rbf_scores(Z, X, alpha_y, gamma, b, *, config: TileConfig | None = None):
     """Dispatching exact decision values f(Z) = sum_i a_i K(x_i, z) + b.
 
-    The Pallas path streams SV tiles flash-attention-style (never
-    materializes the (n, n_sv) kernel matrix in HBM).
+    The Pallas path streams double-buffered SV tiles flash-attention-style
+    (never materializes the (n, n_sv) kernel matrix in HBM).
+    ``config=None`` resolves the tuned (or default) ``TileConfig`` for
+    this (d, m, n) bucket from the tuning registry.
     """
+    if config is None:
+        config = tuning.lookup(
+            "rbf_pred",
+            tuning.shape_key(d=Z.shape[1], m=X.shape[0], n=tuning.bucket(Z.shape[0])),
+        )
     if resolve() == "pallas":
         return rbf_predict_pallas(
             Z, X, alpha_y, gamma, b,
-            block_n=block_n, block_m=block_m, interpret=_interpret(),
+            config=config, interpret=_interpret(),
         )
     return rbf_scores_xla(Z, X, alpha_y, gamma, b)

@@ -1,0 +1,29 @@
+"""Shared tiled-kernel infrastructure for ``repro.kernels.*``.
+
+One layer, three jobs, used by all three kernel families (quadform,
+rbf_pred, maclaurin_attn):
+
+  * ``tiles``    — lane/block padding arithmetic (the ``-(-n//b)*b`` that
+    used to be hand-rolled per kernel);
+  * ``config``   — the frozen, hashable ``TileConfig`` every pallas_call
+    receives (jit-static);
+  * ``tuning``   — measured-or-default ``TileConfig`` resolution per
+    (kernel, platform, shape bucket), backed by the checked-in
+    ``tuning_table.json``;
+  * ``autotune`` — the sweep harness that produces those measurements
+    (driven by ``benchmarks/serving_latency.py``).
+
+Typical kernel-side use::
+
+    from repro.kernels.common import TileConfig, tiles, tuning
+
+    def my_kernel_wrapper(x, *, config: TileConfig | None = None, interpret=False):
+        config = config or tuning.lookup("my_kernel")
+        n_pad = tiles.round_up(x.shape[0], config.block_n)
+        ...
+"""
+
+from repro.kernels.common.config import TileConfig
+from repro.kernels.common import autotune, tiles, tuning
+
+__all__ = ["TileConfig", "autotune", "tiles", "tuning"]

@@ -1,0 +1,79 @@
+"""``TileConfig`` — the one value that travels from the tuning registry
+through ``repro.core.backend`` down into a ``pallas_call``.
+
+A single frozen (hashable — it is a jit static argument) dataclass covers
+all three kernel families; fields a family does not use are simply
+ignored by it:
+
+  ==============  ==========================================================
+  field           used by
+  ==============  ==========================================================
+  ``block_n``     quadform (Z rows/tile), rbf_pred (Z rows/tile)
+  ``block_m``     rbf_pred (SV rows per double-buffered stream tile)
+  ``block_k``     quadform (heads per stacked-Hessian grid block;
+                  ``None`` = as many as ``vmem_limit_mb`` allows)
+  ``chunk``       maclaurin_attn (sequence positions per grid step)
+  ``vmem_limit_mb``  quadform ``block_k`` auto-resolution budget for the
+                  resident (d_pad, block_k*d_pad) Hessian slice
+  ==============  ==========================================================
+
+Instances come from ``repro.kernels.common.tuning`` (measured table or
+per-kernel default) — construct one directly only in tests/benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    block_n: int = 512
+    block_m: int = 256
+    block_k: int | None = None
+    chunk: int = 128
+    vmem_limit_mb: int = 8
+
+    def __post_init__(self):
+        for name in ("block_n", "block_m", "chunk", "vmem_limit_mb"):
+            v = getattr(self, name)
+            if not (isinstance(v, int) and v > 0):
+                raise ValueError(f"TileConfig.{name} must be a positive int, got {v!r}")
+        if self.block_k is not None and not (
+            isinstance(self.block_k, int) and self.block_k > 0
+        ):
+            raise ValueError(f"TileConfig.block_k must be None or a positive int")
+
+    def with_(self, **updates) -> "TileConfig":
+        """Functional update (``dataclasses.replace`` spelled tersely)."""
+        return dataclasses.replace(self, **updates)
+
+    def clamp_block_n(self, n: int) -> "TileConfig":
+        """Shrink block_n to the (padded) batch so tiny buckets do not pad
+        up to a full default tile."""
+        from repro.kernels.common.tiles import SUBLANE, round_up
+
+        target = min(self.block_n, max(SUBLANE, round_up(n, SUBLANE)))
+        return self if target == self.block_n else self.with_(block_n=target)
+
+    def resolve_block_k(self, k: int, d_pad: int) -> int:
+        """Heads per quadform grid block.
+
+        Explicit ``block_k`` wins (capped at k); otherwise the largest
+        count whose (d_pad, block_k*d_pad) f32 Hessian slice fits the
+        ``vmem_limit_mb`` budget, floored at one head (a single head over
+        budget must still run — it is the smallest possible tile).
+        """
+        if self.block_k is not None:
+            return max(1, min(self.block_k, k))
+        budget = self.vmem_limit_mb << 20
+        fit = budget // (4 * d_pad * d_pad)
+        return max(1, min(k, int(fit)))
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TileConfig":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})

@@ -1,0 +1,59 @@
+"""Tile-shape and padding helpers shared by every Pallas kernel family.
+
+TPU tiles are (sublane, lane) = (8, 128) for f32; every kernel in
+``repro.kernels`` pads its operands the same three ways:
+
+  * the feature/contraction axis to a lane multiple (zeros are exact for
+    norms, dots and RBF distances);
+  * the streamed row axis (batch rows, SV rows, sequence chunks) to a
+    block multiple so the grid divides evenly (padded rows are either
+    sliced off the output or carry zero weight);
+  * a head/stack axis to a block multiple (padded heads score zero and
+    are sliced off).
+
+Before this module each kernel hand-rolled the ``-(-n // b) * b``
+arithmetic; keep all of it here so a tiling change is one edit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128      # last-dim tile width, all dtypes
+SUBLANE = 8     # second-to-last tile width, f32
+
+
+def round_up(n: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= n."""
+    return -(-n // multiple) * multiple
+
+
+def lane_pad(d: int) -> int:
+    """Feature-axis padding target: next lane multiple, floored at one lane."""
+    return max(LANE, round_up(d, LANE))
+
+
+def pad_axis(x: jax.Array, axis: int, target: int) -> jax.Array:
+    """Zero-pad one axis of ``x`` up to ``target`` (no-op if already there)."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - cur)
+    return jnp.pad(x, widths)
+
+
+def pad_tail(x: jax.Array, *targets: int) -> jax.Array:
+    """Zero-pad the trailing ``len(targets)`` axes of ``x`` to ``targets``.
+
+    ``pad_tail(Z, n_pad, d_pad)`` pads a (n, d) operand to (n_pad, d_pad).
+    """
+    for axis, target in zip(range(x.ndim - len(targets), x.ndim), targets):
+        x = pad_axis(x, axis, target)
+    return x
+
+
+def grid_blocks(n: int, block: int) -> int:
+    """Number of grid steps covering ``n`` rows at ``block`` rows per step."""
+    return round_up(n, block) // block

@@ -1,0 +1,183 @@
+"""Per-(kernel, platform, shape-bucket) tile tuning registry.
+
+The registry answers one question on the serving hot path: *which
+``TileConfig`` should this kernel use for this shape on this hardware?*
+Resolution order:
+
+  1. in-process overrides (``record(...)`` — what the autotuner and tests
+     write);
+  2. the checked-in measured table ``tuning_table.json`` next to this
+     module (written back by ``benchmarks/serving_latency.py``'s block
+     sweep, keyed by platform so CPU numbers never leak onto TPU);
+  3. the per-kernel default (the pre-tuning fixed block sizes).
+
+Keys are canonical strings from ``shape_key(d=.., k=.., n=..)`` —
+dimension names sorted, so every caller produces the same key for the
+same bucket. Lookup never fails: an unknown kernel/key quietly falls back
+to ``DEFAULTS``; ``lookup(..., strict=True)`` raises instead (tests).
+
+To add a measured entry by hand, append under
+``entries.<platform>.<kernel>.<key>`` in the JSON (see the benchmark for
+the canonical writer) — or call ``record(...)`` + ``save_table()``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import jax
+
+from repro.kernels.common.config import TileConfig
+
+TABLE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "tuning_table.json")
+
+DEFAULTS: dict[str, TileConfig] = {
+    "quadform": TileConfig(block_n=512),
+    "rbf_pred": TileConfig(block_n=256, block_m=256),
+    "maclaurin_attn": TileConfig(chunk=128),
+}
+
+_lock = threading.Lock()
+_overrides: dict[tuple[str, str, str], dict] = {}
+_table_cache: dict | None = None
+
+
+def platform() -> str:
+    """Hardware key the registry partitions on (cpu / tpu / gpu)."""
+    return jax.default_backend()
+
+
+def shape_key(**dims) -> str:
+    """Canonical bucket key: ``shape_key(d=64, k=10, n=1024) -> 'd64_k10_n1024'``.
+
+    Dimension names are sorted so call-site order never matters. Batch-like
+    dimensions should be passed through ``bucket()`` first so every caller
+    lands on the keys the benchmark sweep records.
+    """
+    return "_".join(f"{name}{int(dims[name])}" for name in sorted(dims))
+
+
+def bucket(n: int, lo: int = 32, hi: int = 8192) -> int:
+    """Canonical batch bucket: next power of two, floored at lo, capped at hi.
+
+    THE bucketing policy — the serving engine's shape buckets, the sweep's
+    recorded keys and the dispatch-level lookups all share it, so a batch
+    of 1000 resolves the entry measured for the 1024 bucket instead of
+    missing the table on a raw-n key.
+    """
+    if n <= lo:
+        return lo
+    return min(hi, 1 << (int(n) - 1).bit_length())
+
+
+def _read_table(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {"version": 1, "entries": {}}
+
+
+def _load_table() -> dict:
+    """The checked-in default table, read once per process (lookup tier 2)."""
+    global _table_cache
+    if _table_cache is None:
+        _table_cache = _read_table(TABLE_PATH)
+    return _table_cache
+
+
+def lookup(
+    kernel: str,
+    key: str | None = None,
+    *,
+    platform_name: str | None = None,
+    strict: bool = False,
+) -> TileConfig:
+    """Resolve the ``TileConfig`` for one (kernel, platform, bucket).
+
+    ``key=None`` skips the measured tiers and returns the kernel default
+    (what a caller with no shape information gets).
+    """
+    plat = platform_name or platform()
+    if key is not None:
+        with _lock:
+            hit = _overrides.get((plat, kernel, key))
+        if hit is not None:
+            return TileConfig.from_json(hit)
+        entry = _load_table().get("entries", {}).get(plat, {}).get(kernel, {}).get(key)
+        if entry is not None:
+            return TileConfig.from_json(entry["config"])
+    if strict:
+        raise KeyError(f"no measured tuning for ({plat}, {kernel}, {key})")
+    if kernel not in DEFAULTS:
+        raise KeyError(f"unknown kernel family {kernel!r}; known: {sorted(DEFAULTS)}")
+    return DEFAULTS[kernel]
+
+
+def record(
+    kernel: str,
+    key: str,
+    config: TileConfig,
+    *,
+    platform_name: str | None = None,
+    measured_ms: float | None = None,
+    default_ms: float | None = None,
+    source: str | None = None,
+) -> None:
+    """Write one measured entry into the in-process override tier."""
+    entry = {**config.to_json()}
+    meta = {
+        k: v
+        for k, v in (
+            ("measured_ms", measured_ms),
+            ("default_ms", default_ms),
+            ("source", source),
+        )
+        if v is not None
+    }
+    with _lock:
+        _overrides[(platform_name or platform(), kernel, key)] = entry
+        _overrides_meta[(platform_name or platform(), kernel, key)] = meta
+
+
+_overrides_meta: dict[tuple[str, str, str], dict] = {}
+
+
+def clear_overrides() -> None:
+    """Drop every in-process override (test isolation)."""
+    with _lock:
+        _overrides.clear()
+        _overrides_meta.clear()
+
+
+def save_table(path: str = TABLE_PATH) -> str:
+    """Merge the in-process overrides into the table at ``path`` and write it.
+
+    The benchmark sweep calls this after recording its winners, producing
+    the checked-in ``tuning_table.json`` the next process reads back. The
+    TARGET file is re-read and merged (never the in-process cache, which
+    may belong to a different path); the cached default table is refreshed
+    only when writing to the default location.
+    """
+    global _table_cache
+    table = _read_table(path)
+    entries = table.setdefault("entries", {})
+    with _lock:
+        for (plat, kernel, key), cfg in _overrides.items():
+            slot = entries.setdefault(plat, {}).setdefault(kernel, {})
+            slot[key] = {"config": cfg, **_overrides_meta.get((plat, kernel, key), {})}
+    table["version"] = 1
+    with open(path, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+        f.write("\n")
+    if path == TABLE_PATH:
+        _table_cache = table
+    return path
+
+
+def reload_table() -> None:
+    """Forget the cached table so the next lookup re-reads the file."""
+    global _table_cache
+    _table_cache = None

@@ -21,6 +21,10 @@ steps (TPU grids execute sequentially per core). Each chunk does:
 VMEM (f32, Cs=128, d=dv=128): S2 (d^2 x dv) 8 MB + PHI2 tile (Cs x d^2)
 8 MB + S1/K/Q/V tiles < 1 MB -> ~17 MB peak; fits v5e VMEM. For d > 128,
 tile S2 over a dv-grid axis (not needed for the assigned archs).
+
+The chunk size comes from ``repro.kernels.common`` (``TileConfig.chunk``,
+resolved by the tuning registry when the caller passes no config); the
+sequence axis is padded with the shared ``tiles`` helpers.
 """
 
 from __future__ import annotations
@@ -31,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import TileConfig, tiles, tuning
 
 
 def _phi2(x):
@@ -111,18 +117,20 @@ def maclaurin_attention_pallas(
     v: jax.Array,
     *,
     scale: float | None = None,
-    chunk: int = 128,
+    config: TileConfig | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """q, k: (BH, T, d_k); v: (BH, T, d_v). Causal. Returns (BH, T, d_v)."""
+    config = config or tuning.lookup("maclaurin_attn")
     bh, t, d = q.shape
     dv = v.shape[-1]
     if scale is None:
         scale = 1.0 / float(d) ** 0.5
-    t_pad = -(-t // chunk) * chunk
-    qp = jnp.pad(q, ((0, 0), (0, t_pad - t), (0, 0)))
-    kp = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0)))
-    vp = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0)))
+    chunk = min(config.chunk, t)
+    t_pad = tiles.round_up(t, chunk)
+    qp = tiles.pad_axis(q, 1, t_pad)
+    kp = tiles.pad_axis(k, 1, t_pad)
+    vp = tiles.pad_axis(v, 1, t_pad)
     n_chunks = t_pad // chunk
     misc_cols = max(dv, 2)
 

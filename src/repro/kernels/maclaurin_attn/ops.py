@@ -2,7 +2,9 @@
 
 Accepts (batch, heads, T, d) layouts, flattens to (B*H, T, d) for the
 kernel grid, and falls back to the quadratic jnp oracle when
-``use_pallas=False``. Interpret mode on CPU.
+``use_pallas=False``. Interpret mode on CPU. The chunk size travels as
+``TileConfig.chunk`` (``None`` resolves the family default from the
+tuning registry).
 """
 
 from __future__ import annotations
@@ -12,6 +14,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import TileConfig
 from repro.kernels.maclaurin_attn.kernel import maclaurin_attention_pallas
 from repro.kernels.maclaurin_attn.ref import maclaurin_attention_ref
 
@@ -20,9 +23,10 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-@partial(jax.jit, static_argnames=("scale", "chunk", "use_pallas"))
+@partial(jax.jit, static_argnames=("scale", "config", "use_pallas"))
 def maclaurin_attention(
-    q, k, v, scale: float | None = None, chunk: int = 128, use_pallas: bool = True
+    q, k, v, scale: float | None = None,
+    config: TileConfig | None = None, use_pallas: bool = True,
 ):
     """Causal Maclaurin attention. q,k: (B, H, T, d_k), v: (B, H, T, d_v)."""
     if not use_pallas:
@@ -31,6 +35,6 @@ def maclaurin_attention(
     dv = v.shape[-1]
     flat = lambda x: x.reshape(b * h, t, x.shape[-1])
     out = maclaurin_attention_pallas(
-        flat(q), flat(k), flat(v), scale=scale, chunk=min(chunk, t), interpret=_on_cpu()
+        flat(q), flat(k), flat(v), scale=scale, config=config, interpret=_on_cpu()
     )
     return out.reshape(b, h, t, dv).astype(v.dtype)

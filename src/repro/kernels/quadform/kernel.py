@@ -4,17 +4,26 @@ For K collapsed heads (c_k, v_k, M_k) sharing one input batch Z,
 
     f_k(z) = exp(-gamma_k ||z||^2) (c_k + v_k^T z + z^T M_k z) + b_k
 
-All K Hessians stay RESIDENT in VMEM as ONE (d, K*d) operand (read once
-from HBM, not once per tile and never once per head).  Each grid step
-streams one Z tile through a single MXU contraction
+The K Hessians are laid out as ONE stacked (d, K*d) operand and TILED
+over a second grid axis in head-blocks of ``block_k`` heads, so K*d^2 no
+longer has to fit VMEM at once (mnist K=10 at d=784 is ~31 MB stacked —
+over a single core's budget; each (d, block_k*d) slice stays under the
+``TileConfig.vmem_limit_mb`` budget). Grid = (head_blocks, n_tiles) with
+Z tiles innermost: each Hessian slice is read from HBM exactly ONCE and
+stays resident while every Z tile streams through back-to-back per-head
+MXU dots
 
-    Z @ M_all -> (BN, K*d)   --reshape-->   (BN, K, d)
+    Z @ M_k -> (BN, d)   --row-dot Z-->   (BN,)      for each head in block
 
-followed by a VPU row-dot with Z -> (BN, K) quadratic terms, the thin
-linear GEMM Z @ V^T -> (BN, K), and a fused exp/bias/validity epilogue.
-One pallas_call scores ALL heads: OvR multiclass no longer pays K passes
-over Z nor K separate reads of each d x d Hessian.  K = 1 recovers the
-original single-head kernel exactly.
+plus the thin per-head linear term and a fused exp/bias/validity
+epilogue (the per-head dots have the same FLOPs as one wide
+(BN, d) @ (d, BK*d) contraction, but their shapes are independent of the
+tiling, which keeps the fp32 accumulation order fixed). Head-blocks are
+independent — every (i, j) grid step writes its own (BN, BK) score tile,
+no cross-step accumulation — so the tiled kernel is bit-for-bit identical
+to the untiled one for any block_k. block_k = K recovers the PR-1
+fully-resident kernel; K = 1 recovers the original single-head kernel
+exactly.
 
 Scalar head parameters arrive as a (4, K) f32 operand (rows: c, b, gamma,
 ||x_M||^2) instead of baked-in Python floats, so the kernel can be traced
@@ -25,11 +34,9 @@ Outputs per batch row: (BN, K) scores, ||z||^2 (shared across heads), and
 the per-head Eq 3.11 validity mask — the accuracy-contract check is free
 because ||z||^2 already feeds the exp envelope.
 
-VMEM: the resident operand is K*d^2 f32 — 16 MB at (K=1, d=2000), the
-paper's largest case.  Large K*d^2 (e.g. K=10 at mnist's d=784) exceeds a
-single core's VMEM on real hardware; tiling M_all over a second grid axis
-is the designated follow-up once a TPU host is in the loop (see
-ROADMAP.md "Serving architecture").
+Block sizes come from ``repro.kernels.common``: pass a ``TileConfig``
+(the backend/tuning layer resolves one per shape bucket) or get the
+kernel-family default.
 """
 
 from __future__ import annotations
@@ -40,30 +47,39 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import TileConfig, tiles, tuning
 from repro.kernels.quadform.ref import eq311_valid
 
 
 def _heads_kernel(z_ref, m_ref, v_ref, p_ref, o_ref, zsq_ref, valid_ref,
-                  *, num_heads: int, d_pad: int):
+                  *, block_k: int, d_pad: int):
     z = z_ref[...]                            # (BN, d)
-    m = m_ref[...]                            # (d, K*d)  resident
-    v = v_ref[...]                            # (K, d)
-    p = p_ref[...]                            # (4, K): c, b, gamma, ||x_M||^2
+    v = v_ref[...]                            # (BK, d)
+    p = p_ref[...]                            # (4, BK): c, b, gamma, ||x_M||^2
     c, bias, gamma, msq = p[0], p[1], p[2], p[3]
 
     z_sq = jnp.sum(z * z, axis=-1)            # (BN,)
-    zm = jax.lax.dot_general(
-        z, m, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )                                         # (BN, K*d) -- ONE MXU contraction
-    zm = zm.reshape(z.shape[0], num_heads, d_pad)
-    quad = jnp.sum(zm * z[:, None, :], axis=-1)            # (BN, K) row-dot
-    lin = jax.lax.dot_general(
-        z, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )                                         # (BN, K)
+    # Per-head (BN, d) @ (d, d) MXU dots against the resident slice, then a
+    # VPU row-dot. The unrolled loop is static (block_k is a trace-time
+    # constant) and every dot has the SAME shape for ANY block_k, so the
+    # fp32 accumulation order per head never depends on the tiling — tiled
+    # and untiled kernels are bit-for-bit identical (a wide fused
+    # (BN, d) @ (d, BK*d) contraction has the same FLOPs but lets the GEMM
+    # reorder its accumulation with the block width).
+    quad_h, lin_h = [], []
+    for h in range(block_k):
+        zm = jax.lax.dot_general(
+            z, m_ref[:, h * d_pad:(h + 1) * d_pad],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )                                     # (BN, d)
+        quad_h.append(jnp.sum(zm * z, axis=-1))            # (BN,)
+        lin_h.append(jnp.sum(z * v[h][None, :], axis=-1))  # (BN,)
+    quad = jnp.stack(quad_h, axis=-1)         # (BN, BK)
+    lin = jnp.stack(lin_h, axis=-1)           # (BN, BK)
     g_hat = c[None, :] + lin + quad
     env = jnp.exp(-z_sq[:, None] * gamma[None, :])
     o_ref[...] = env * g_hat + bias[None, :]
-    zsq_ref[...] = z_sq
+    zsq_ref[...] = z_sq                       # same value for every head-block
     valid_ref[...] = eq311_valid(z_sq, gamma, msq).astype(jnp.float32)
 
 
@@ -76,47 +92,58 @@ def quadform_heads_pallas(
     gamma: jax.Array,
     msq: jax.Array,
     *,
-    block_n: int = 512,
+    config: TileConfig | None = None,
     interpret: bool = False,
 ):
-    """Fused K-head scores. Z: (n, d), M_all: (K, d, d), V: (K, d);
-    c/b/gamma/msq: (K,). Returns (scores (n, K), z_sq (n,), valid (n, K))."""
+    """Fused K-head scores, head-block tiled. Z: (n, d), M_all: (K, d, d),
+    V: (K, d); c/b/gamma/msq: (K,). Returns (scores (n, K), z_sq (n,),
+    valid (n, K))."""
+    config = config or tuning.lookup("quadform")
     n, d = Z.shape
     k = M_all.shape[0]
-    d_pad = max(128, -(-d // 128) * 128)
-    n_pad = -(-n // block_n) * block_n
-    Zp = jnp.pad(Z.astype(jnp.float32), ((0, n_pad - n), (0, d_pad - d)))
-    Mp = jnp.pad(M_all.astype(jnp.float32), ((0, 0), (0, d_pad - d), (0, d_pad - d)))
+    d_pad = tiles.lane_pad(d)
+    config = config.clamp_block_n(n)
+    block_n = config.block_n
+    block_k = config.resolve_block_k(k, d_pad)
+    n_pad = tiles.round_up(n, block_n)
+    k_pad = tiles.round_up(k, block_k)
+
+    Zp = tiles.pad_tail(Z.astype(jnp.float32), n_pad, d_pad)
+    Mp = tiles.pad_tail(M_all.astype(jnp.float32), d_pad, d_pad)
+    Mp = tiles.pad_axis(Mp, 0, k_pad)         # zero Hessians for padded heads
     # (K, d, d) -> (d, K*d) with m[:, k*d:(k+1)*d] = M_k, so the reshape of
     # Z @ m back to (BN, K, d) groups columns per head.
-    m_kd = jnp.transpose(Mp, (1, 0, 2)).reshape(d_pad, k * d_pad)
-    Vp = jnp.pad(V.astype(jnp.float32), ((0, 0), (0, d_pad - d)))
+    m_kd = jnp.transpose(Mp, (1, 0, 2)).reshape(d_pad, k_pad * d_pad)
+    Vp = tiles.pad_tail(V.astype(jnp.float32), k_pad, d_pad)
     params = jnp.stack(
         [jnp.ravel(c), jnp.ravel(b), jnp.ravel(gamma), jnp.ravel(msq)]
     ).astype(jnp.float32)                                  # (4, K)
+    params = tiles.pad_axis(params, 1, k_pad)
 
+    # Head-blocks OUTER, Z tiles inner: each (d, BK*d) Hessian slice is
+    # fetched once and reused across the whole batch.
     scores, z_sq, valid = pl.pallas_call(
-        functools.partial(_heads_kernel, num_heads=k, d_pad=d_pad),
-        grid=(n_pad // block_n,),
+        functools.partial(_heads_kernel, block_k=block_k, d_pad=d_pad),
+        grid=(k_pad // block_k, n_pad // block_n),
         in_specs=[
-            pl.BlockSpec((block_n, d_pad), lambda i: (i, 0)),
-            pl.BlockSpec((d_pad, k * d_pad), lambda i: (0, 0)),   # M_all resident
-            pl.BlockSpec((k, d_pad), lambda i: (0, 0)),
-            pl.BlockSpec((4, k), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, d_pad), lambda j, i: (i, 0)),
+            pl.BlockSpec((d_pad, block_k * d_pad), lambda j, i: (0, j)),
+            pl.BlockSpec((block_k, d_pad), lambda j, i: (j, 0)),
+            pl.BlockSpec((4, block_k), lambda j, i: (0, j)),
         ],
         out_specs=[
-            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, block_k), lambda j, i: (i, j)),
+            pl.BlockSpec((block_n,), lambda j, i: (i,)),
+            pl.BlockSpec((block_n, block_k), lambda j, i: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, k_pad), jnp.float32),
             jax.ShapeDtypeStruct((n_pad,), jnp.float32),
-            jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, k_pad), jnp.float32),
         ],
         interpret=interpret,
     )(Zp, m_kd, Vp, params)
-    return scores[:n], z_sq[:n], valid[:n] > 0.0
+    return scores[:n, :k], z_sq[:n], valid[:n, :k] > 0.0
 
 
 def quadform_predict_pallas(
@@ -127,7 +154,7 @@ def quadform_predict_pallas(
     b,
     gamma,
     *,
-    block_n: int = 512,
+    config: TileConfig | None = None,
     interpret: bool = False,
 ):
     """Single-head wrapper (the original kernel API): K = 1 of the fused path.
@@ -138,6 +165,6 @@ def quadform_predict_pallas(
     one = lambda x: jnp.reshape(jnp.asarray(x, jnp.float32), (1,))
     scores, z_sq, _ = quadform_heads_pallas(
         Z, M[None], v[None], one(c), one(b), one(gamma), one(0.0),
-        block_n=block_n, interpret=interpret,
+        config=config, interpret=interpret,
     )
     return scores[:, 0], z_sq

@@ -6,9 +6,11 @@ share one implementation of the math.  ``use_pallas`` is kept for explicit
 A/B benchmarking (Table-2 style comparisons) and pins the path regardless
 of the process-level backend choice.
 
-Unlike the seed version, model scalars (c, b, gamma) are TRACED arguments,
-not static — the kernels take them as array operands, so these wrappers
-compose with outer jits over model pytrees without retracing per value.
+Block sizes travel as a ``TileConfig`` (hashable, jit-static; ``None``
+resolves the kernel-family default from ``repro.kernels.common.tuning``).
+Model scalars (c, b, gamma) are TRACED arguments, not static — the
+kernels take them as array operands, so these wrappers compose with outer
+jits over model pytrees without retracing per value.
 """
 
 from __future__ import annotations
@@ -17,6 +19,7 @@ from functools import partial
 
 import jax
 
+from repro.kernels.common import TileConfig
 from repro.kernels.quadform.kernel import (
     quadform_heads_pallas,
     quadform_predict_pallas,
@@ -28,23 +31,23 @@ def _off_tpu() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "block_n"))
+@partial(jax.jit, static_argnames=("use_pallas", "config"))
 def quadform_predict(
     Z, M, v, c, b, gamma,
-    use_pallas: bool = True, block_n: int = 512,
+    use_pallas: bool = True, config: TileConfig | None = None,
 ):
     """Single-head (f_hat, z_sq). K=1 slice of the fused multi-head kernel."""
     if use_pallas:
         return quadform_predict_pallas(
-            Z, M, v, c, b, gamma, block_n=block_n, interpret=_off_tpu()
+            Z, M, v, c, b, gamma, config=config, interpret=_off_tpu()
         )
     return quadform_predict_ref(Z, M, v, c, b, gamma)
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "block_n"))
+@partial(jax.jit, static_argnames=("use_pallas", "config"))
 def quadform_predict_heads(
     Z, M_all, V, c, b, gamma, msq,
-    use_pallas: bool = True, block_n: int = 512,
+    use_pallas: bool = True, config: TileConfig | None = None,
 ):
     """Fused K-head (scores (n, K), z_sq (n,), valid (n, K)).
 
@@ -53,6 +56,6 @@ def quadform_predict_heads(
     """
     if use_pallas:
         return quadform_heads_pallas(
-            Z, M_all, V, c, b, gamma, msq, block_n=block_n, interpret=_off_tpu()
+            Z, M_all, V, c, b, gamma, msq, config=config, interpret=_off_tpu()
         )
     return quadform_heads_ref(Z, M_all, V, c, b, gamma, msq)

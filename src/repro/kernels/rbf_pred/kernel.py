@@ -1,18 +1,27 @@
-"""Pallas TPU kernel: exact RBF-expansion prediction, streaming over SVs.
+"""Pallas TPU kernel: exact RBF-expansion prediction, streaming over SVs
+with DOUBLE-BUFFERED support-vector tiles.
 
 Computes f(Z) = sum_i a_i exp(-gamma ||x_i - z||^2) + b without ever
 materializing the (n x n_sv) kernel matrix in HBM (flash-attention-style
-online accumulation). The pairwise distance is produced by one MXU GEMM per
-(z-tile, sv-tile):
+online accumulation). The pairwise distance is produced by one MXU GEMM
+per (z-tile, sv-tile):
 
     d2 = ||z||^2 + ||x||^2 - 2 Z X^T
 
-Grid: (n_tiles, m_tiles), SV dimension innermost so each z-tile's
-accumulator lives in the revisited output block.
+Schedule: grid = (n_tiles,) over Z tiles only. The SV matrix and its
+coefficients stay in HBM (``memory_space=ANY``) and are streamed through
+a 2-slot VMEM scratch by explicit async copies — while tile j is in the
+MXU, tile j+1 is already in flight (the double-buffer pattern from the
+Pallas guide), so the SV stream hides its own HBM latency instead of
+serializing DMA-then-compute per tile. The per-Z-tile accumulator is a
+fori_loop carry in registers; the output block is written once.
 
-VMEM working set per step (f32): BN*d (Z tile) + BM*d (X tile) + BN*BM
-(scores) + BN (acc) — with BN=BM=256, d<=2048: ~4.5 MB, comfortably within
-a v5e core's VMEM.
+VMEM working set per step (f32): BN*d (Z tile) + 2*BM*d (X slots) +
+2*BM (alpha slots) + BN*BM (scores) — with BN=BM=256, d<=2048: ~6.5 MB,
+comfortably within a v5e core's VMEM.
+
+Block sizes come from ``repro.kernels.common`` (``TileConfig.block_n`` /
+``block_m``), resolved per shape bucket by the tuning registry.
 """
 
 from __future__ import annotations
@@ -22,33 +31,54 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import TileConfig, tiles, tuning
 
 
-def _kernel(z_ref, x_ref, a_ref, p_ref, o_ref, *, m_tiles: int):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    z = z_ref[...]                      # (BN, d)
-    x = x_ref[...]                      # (BM, d)
-    a = a_ref[...]                      # (BM,)
+def _kernel(x_hbm, a_hbm, z_ref, p_ref, o_ref, x_slots, a_slots, sem_x, sem_a,
+            *, m_tiles: int, block_m: int):
+    z = z_ref[...]                      # (BN, d) resident for this grid step
     p = p_ref[...]                      # (2,): gamma, bias — traced operands,
     gamma, bias = p[0], p[1]            # not baked Python floats (jit-able)
     z_sq = jnp.sum(z * z, axis=-1)      # (BN,)
-    x_sq = jnp.sum(x * x, axis=-1)      # (BM,)
-    # MXU GEMM + VPU epilogue, all in VMEM.
-    dots = jax.lax.dot_general(
-        z, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )                                   # (BN, BM)
-    d2 = jnp.maximum(z_sq[:, None] + x_sq[None, :] - 2.0 * dots, 0.0)
-    contrib = jnp.exp(-gamma * d2) @ a  # (BN,)
-    o_ref[...] += contrib
 
-    @pl.when(j == m_tiles - 1)
-    def _finalize():
-        o_ref[...] += bias
+    def copy_x(slot, j):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(j * block_m, block_m)], x_slots.at[slot], sem_x.at[slot]
+        )
+
+    def copy_a(slot, j):
+        return pltpu.make_async_copy(
+            a_hbm.at[pl.ds(j * block_m, block_m)], a_slots.at[slot], sem_a.at[slot]
+        )
+
+    copy_x(0, 0).start()                # warm up: first SV tile in flight
+    copy_a(0, 0).start()
+
+    def body(j, acc):
+        slot = j % 2
+        nxt = (j + 1) % 2
+
+        @pl.when(j + 1 < m_tiles)
+        def _prefetch():                # overlap: next tile DMAs during compute
+            copy_x(nxt, j + 1).start()
+            copy_a(nxt, j + 1).start()
+
+        copy_x(slot, j).wait()
+        copy_a(slot, j).wait()
+        x = x_slots[slot]               # (BM, d)
+        a = a_slots[slot]               # (BM,)
+        x_sq = jnp.sum(x * x, axis=-1)
+        # MXU GEMM + VPU epilogue, all in VMEM.
+        dots = jax.lax.dot_general(
+            z, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                               # (BN, BM)
+        d2 = jnp.maximum(z_sq[:, None] + x_sq[None, :] - 2.0 * dots, 0.0)
+        return acc + jnp.exp(-gamma * d2) @ a
+
+    acc = jax.lax.fori_loop(0, m_tiles, body, jnp.zeros_like(o_ref))
+    o_ref[...] = acc + bias
 
 
 def rbf_predict_pallas(
@@ -58,38 +88,46 @@ def rbf_predict_pallas(
     gamma: float,
     b: float,
     *,
-    block_n: int = 256,
-    block_m: int = 256,
+    config: TileConfig | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Padded + tiled pallas_call wrapper. Z: (n, d), X: (m, d), a: (m,)."""
+    config = config or tuning.lookup("rbf_pred")
     n, d = Z.shape
     m = X.shape[0]
+    config = config.clamp_block_n(n)
+    block_n, block_m = config.block_n, config.block_m
 
     # Pad: d to lane multiple (zeros preserve norms/dots), m to block
     # (alpha=0 rows contribute exactly 0), n to block (rows sliced off).
-    d_pad = max(128, -(-d // 128) * 128)
-    n_pad = -(-n // block_n) * block_n
-    m_pad = -(-m // block_m) * block_m
-    Zp = jnp.pad(Z, ((0, n_pad - n), (0, d_pad - d)))
-    Xp = jnp.pad(X, ((0, m_pad - m), (0, d_pad - d)))
-    ap = jnp.pad(alpha_y, (0, m_pad - m))
+    d_pad = tiles.lane_pad(d)
+    n_pad = tiles.round_up(n, block_n)
+    m_pad = tiles.round_up(m, block_m)
+    Zp = tiles.pad_tail(Z, n_pad, d_pad)
+    Xp = tiles.pad_tail(X, m_pad, d_pad)
+    ap = tiles.pad_axis(alpha_y, 0, m_pad)
     params = jnp.stack(
         [jnp.asarray(gamma, jnp.float32), jnp.asarray(b, jnp.float32)]
     )                                                       # (2,)
 
-    n_tiles, m_tiles = n_pad // block_n, m_pad // block_m
+    m_tiles = m_pad // block_m
     out = pl.pallas_call(
-        functools.partial(_kernel, m_tiles=m_tiles),
-        grid=(n_tiles, m_tiles),
+        functools.partial(_kernel, m_tiles=m_tiles, block_m=block_m),
+        grid=(n_pad // block_n,),
         in_specs=[
-            pl.BlockSpec((block_n, d_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_m, d_pad), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_m,), lambda i, j: (j,)),
-            pl.BlockSpec((2,), lambda i, j: (0,)),
+            pl.BlockSpec(memory_space=pltpu.ANY),           # X stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),           # alpha stays in HBM
+            pl.BlockSpec((block_n, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
         ],
-        out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((2, block_m, d_pad), jnp.float32),   # X double buffer
+            pltpu.VMEM((2, block_m), jnp.float32),          # alpha double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
         interpret=interpret,
-    )(Zp.astype(jnp.float32), Xp.astype(jnp.float32), ap.astype(jnp.float32), params)
+    )(Xp.astype(jnp.float32), ap.astype(jnp.float32), Zp.astype(jnp.float32), params)
     return out[:n]

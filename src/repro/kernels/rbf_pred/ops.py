@@ -6,8 +6,10 @@ jnp oracle (what XLA fuses on its own) — the Table-2 benchmark compares
 both.  Process-level Pallas-vs-XLA routing for the serving path lives in
 ``repro.core.backend``; this shim pins the path explicitly for A/B runs.
 
-``gamma`` and ``b`` are TRACED arguments (array operands of the kernel),
-so this composes with outer jits over SVMModel pytrees without retracing.
+Block sizes travel as a ``TileConfig`` (``None`` resolves the rbf_pred
+default from the tuning registry). ``gamma`` and ``b`` are TRACED
+arguments (array operands of the kernel), so this composes with outer
+jits over SVMModel pytrees without retracing.
 """
 
 from __future__ import annotations
@@ -16,6 +18,7 @@ from functools import partial
 
 import jax
 
+from repro.kernels.common import TileConfig
 from repro.kernels.rbf_pred.kernel import rbf_predict_pallas
 from repro.kernels.rbf_pred.ref import rbf_predict_ref
 
@@ -24,7 +27,7 @@ def _off_tpu() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "block_n", "block_m"))
+@partial(jax.jit, static_argnames=("use_pallas", "config"))
 def rbf_predict(
     Z,
     X,
@@ -32,12 +35,10 @@ def rbf_predict(
     gamma,
     b,
     use_pallas: bool = True,
-    block_n: int = 256,
-    block_m: int = 256,
+    config: TileConfig | None = None,
 ):
     if use_pallas:
         return rbf_predict_pallas(
-            Z, X, alpha_y, gamma, b,
-            block_n=block_n, block_m=block_m, interpret=_off_tpu(),
+            Z, X, alpha_y, gamma, b, config=config, interpret=_off_tpu()
         )
     return rbf_predict_ref(Z, X, alpha_y, gamma, b)

@@ -165,8 +165,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, rules_name: str = "aut
         )
         lowered = jitted.lower(*cell.args)
         compiled = lowered.compile()
+        from repro.launch.hlo_cost import normalize_cost_analysis
+
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis()
+        ca = normalize_cost_analysis(compiled.cost_analysis())
         text = compiled.as_text()
     import gzip
 
@@ -189,8 +191,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, rules_name: str = "aut
             - ma.alias_size_in_bytes,
         },
         "xla_cost": {
-            "flops_body_once": ca.get("flops", 0.0) if ca else 0.0,
-            "bytes_body_once": ca.get("bytes accessed", 0.0) if ca else 0.0,
+            "flops_body_once": ca.get("flops", 0.0),
+            "bytes_body_once": ca.get("bytes accessed", 0.0),
         },
     }
     result = _attach_costs(result, text)

@@ -25,6 +25,22 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
+
+def normalize_cost_analysis(ca) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returned a per-device LIST of properties dicts (sometimes
+    empty), current jax returns the dict directly; ``None`` shows up on
+    backends without a cost model. Callers always want one flat dict —
+    ``{}`` when nothing is available — so indexing like ``ca["flops"]``
+    never dies with "list indices must be integers".
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,

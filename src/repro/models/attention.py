@@ -8,6 +8,7 @@ shardings of w_o).
 
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
@@ -162,25 +163,57 @@ def decode_attention(
     return out, cache_k, cache_v
 
 
+# int8 KV quantization granularity: symmetric scale per (token, head,
+# KV_QUANT_GROUP-channel group). Per-token-per-head scales (one scale over
+# the whole head_dim) lose argmax parity vs the fp path on small models —
+# one outlier channel inflates the scale and the other channels' resolution
+# collapses; 16-channel groups restore exact argmax agreement on the
+# tests/test_serve.py workload at 1/4 the scale overhead of per-channel.
+KV_QUANT_GROUP = 16
+
+
+def _kv_group(head_dim: int) -> int:
+    """Channels per scale group: the largest divisor of head_dim that is
+    <= KV_QUANT_GROUP (gcd), so grouping works for ANY head_dim — an odd
+    width degrades toward finer scales, never toward a reshape error."""
+    return math.gcd(head_dim, KV_QUANT_GROUP)
+
+
+def kv_quant_groups(head_dim: int) -> int:
+    """Scale entries per (token, head); init_cache sizes the scale caches
+    with this so it stays in lock-step with decode_attention_quant."""
+    return head_dim // _kv_group(head_dim)
+
+
 def decode_attention_quant(
     params, x, cache_k, cache_v, k_scale, v_scale, pos,
     *, n_heads, n_kv, head_dim, rope_theta=10000.0
 ):
-    """Cached decode with an INT8 KV cache (per-token-per-head symmetric
-    scales — the KIVI/KVQuant family). Exactly equivalent math:
+    """Cached decode with an INT8 KV cache (grouped sub-channel symmetric
+    scales — the KIVI/KVQuant family). Exactly equivalent math: the cache
+    tiles are dequantized group-wise in registers right before the dot,
 
-        q.k = (q . k_int8) * scale_s          (scale factored out of the dot)
-        sum_s w_ts v_s = sum_s (w_ts * vscale_s) v_int8_s
+        k_s = k_int8_s,g * kscale_s,g          (g = 16-channel group)
+        sum_s w_ts v_s = sum_s w_ts (v_int8_s,g * vscale_s,g)
 
-    Halves cache HBM traffic AND capacity vs bf16 (the decode roofline
-    lever identified in EXPERIMENTS.md §Roofline notes)."""
+    so the int8 tensors are what crosses HBM. Halves cache traffic AND
+    capacity vs bf16 (the decode roofline lever identified in
+    EXPERIMENTS.md §Roofline notes)."""
     B = x.shape[0]
     positions = jnp.full((B, 1), pos, dtype=jnp.int32)
     q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta)
+    group = _kv_group(head_dim)
+    G = head_dim // group
 
-    def quantize(t):  # (B, 1, Hkv, hd) -> int8 + (B, 1, Hkv, 1) scale
-        s = jnp.max(jnp.abs(t), axis=-1, keepdims=True) / 127.0 + 1e-9
-        return jnp.clip(jnp.round(t / s), -127, 127).astype(jnp.int8), s
+    def quantize(t):  # (B, 1, Hkv, hd) -> int8 + (B, 1, Hkv, G) group scales
+        tg = t.reshape(*t.shape[:-1], G, group)
+        s = jnp.max(jnp.abs(tg), axis=-1, keepdims=True) / 127.0 + 1e-9
+        q8 = jnp.clip(jnp.round(tg / s), -127, 127).astype(jnp.int8)
+        return q8.reshape(t.shape), s[..., 0]
+
+    def dequantize(c8, s):  # (B, S, Hkv, hd) int8 + (B, S, Hkv, G) -> f32
+        cg = c8.astype(jnp.float32).reshape(*c8.shape[:-1], G, group)
+        return (cg * s[..., None]).reshape(c8.shape)
 
     kq, ks = quantize(k)
     vq, vs = quantize(v)
@@ -194,16 +227,15 @@ def decode_attention_quant(
     qh = q.reshape(B, 1, Hkv, g, head_dim)
     scale = 1.0 / (head_dim**0.5)
     u = jnp.einsum(
-        "bthgd,bshd->bhgts", qh, cache_k.astype(q.dtype),
+        "bthgd,bshd->bhgts", qh, dequantize(cache_k, k_scale).astype(q.dtype),
         preferred_element_type=jnp.float32,
     ) * scale
-    u = u * k_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, None, None, :]
     valid = (jnp.arange(S) <= pos)[None, None, None, None, :]
     u = jnp.where(valid, u, -jnp.inf)
     w = jax.nn.softmax(u, axis=-1)
-    w = w * v_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, None, None, :]
     out = jnp.einsum(
-        "bhgts,bshd->bthgd", w.astype(q.dtype), cache_v.astype(q.dtype)
+        "bhgts,bshd->bthgd", w.astype(q.dtype),
+        dequantize(cache_v, v_scale).astype(q.dtype),
     )
     out = out.reshape(B, 1, n_heads * head_dim) @ params["w_o"]
     return out, cache_k, cache_v, k_scale, v_scale

@@ -376,12 +376,16 @@ def init_cache(cfg: ModelConfig, B: int, S: int, image_embeds: Array | None = No
 
     def kv(L):
         if cfg.kv_cache_dtype == "int8" and cfg.family not in ("hybrid", "vlm"):
-            # int8 values + per-token-per-head f32 scales (dense archs)
+            # int8 values + grouped sub-channel f32 scales (dense archs);
+            # group size lives in repro.models.attention (KV_QUANT_GROUP)
+            from repro.models.attention import kv_quant_groups
+
+            G = kv_quant_groups(hd)
             return (
                 jnp.zeros((L, B, S, Hkv, hd), jnp.int8),
                 jnp.zeros((L, B, S, Hkv, hd), jnp.int8),
-                jnp.zeros((L, B, S, Hkv, 1), jnp.float32),
-                jnp.zeros((L, B, S, Hkv, 1), jnp.float32),
+                jnp.zeros((L, B, S, Hkv, G), jnp.float32),
+                jnp.zeros((L, B, S, Hkv, G), jnp.float32),
             )
         return (
             jnp.zeros((L, B, S, Hkv, hd), dtype),

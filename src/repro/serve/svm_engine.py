@@ -15,6 +15,15 @@ Shape buckets, bounded jit cache
   to the compiled step (no-op on CPU where buffer sizes can't alias; lets
   XLA reuse the buffer on device backends).
 
+Per-bucket tile tuning
+  Each bucket resolves its own ``TileConfig`` at trace time from the
+  ``repro.kernels.common.tuning`` registry (measured entry for this
+  (d, K, bucket) on this platform if the checked-in table has one, else
+  the kernel default), so ``warmup()`` precompiles the TUNED variant of
+  every bucket, not one fixed block size. Resolved configs are kept in
+  ``bucket_configs`` for observability; an explicit ``tile_config``
+  argument pins all buckets (A/B runs).
+
 One fused compiled step
   The step scores ALL K heads with a single backend call (one pallas_call
   on TPU / one stacked-Hessian GEMM under XLA — not K vmapped passes), and
@@ -54,15 +63,19 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import backend
 from repro.core.maclaurin import ApproxModel
 from repro.core.rbf import SVMModel
+from repro.kernels.common import TileConfig, tuning
 
 Array = jax.Array
 
 
 def bucket_size(n: int, min_bucket: int = 32, max_batch: int = 8192) -> int:
-    """Next power-of-two bucket for a batch of n rows (n <= max_batch)."""
-    if n <= min_bucket:
-        return min_bucket
-    return min(max_batch, 1 << (n - 1).bit_length())
+    """Next power-of-two bucket for a batch of n rows (n <= max_batch).
+
+    Delegates to the canonical policy in ``kernels.common.tuning`` so the
+    engine's buckets, the sweep's recorded keys and the dispatch-level
+    lookups can never drift apart.
+    """
+    return tuning.bucket(n, lo=min_bucket, hi=max_batch)
 
 
 @dataclasses.dataclass
@@ -132,7 +145,7 @@ class SVMEngine:
         mesh: Mesh | None = None,
         min_bucket: int = 32,
         max_batch: int = 8192,
-        block_n: int = 512,
+        tile_config: TileConfig | None = None,
     ):
         if min_bucket & (min_bucket - 1) or max_batch & (max_batch - 1):
             raise ValueError("min_bucket and max_batch must be powers of two")
@@ -144,7 +157,8 @@ class SVMEngine:
         self.allow_fallback = allow_fallback and exact is not None
         self.min_bucket = min_bucket
         self.max_batch = max_batch
-        self.block_n = block_n
+        self.tile_config = tile_config
+        self.bucket_configs: dict[int, TileConfig] = {}
         self.stats = EngineStats()
 
         # Model weights are closed over -> baked into the executable as
@@ -158,8 +172,11 @@ class SVMEngine:
         )
 
         def _step(Zp):
+            # Runs once per bucket (at trace time): resolve this bucket's
+            # tuned tile sizes, so warmup() precompiles tuned variants.
+            cfg = self._resolve_tile_config(Zp.shape[0])
             scores, _, valid = backend.quadform_heads(
-                Zp, M_all, V, *heads, block_n=min(block_n, Zp.shape[0])
+                Zp, M_all, V, *heads, config=cfg
             )
             valid_row = jnp.all(valid, axis=-1)            # (B,)
             if self.multiclass:
@@ -171,6 +188,27 @@ class SVMEngine:
         donate = (0,) if jax.default_backend() != "cpu" else ()
         self._step = jax.jit(_step, donate_argnums=donate)
         self._slow = self._build_slow(exact, mesh) if exact is not None else None
+
+    # ---------------------------------------------------------- tile tuning
+
+    def _resolve_tile_config(self, bucket: int) -> TileConfig:
+        """The TileConfig this shape bucket's compiled step uses.
+
+        Explicit ``tile_config`` pins every bucket; otherwise the tuning
+        registry is consulted per (d, K, bucket) — a measured entry from
+        the checked-in table (written by the serving-latency block sweep)
+        or the quadform default. block_n is clamped to the bucket so tiny
+        buckets never pad up to a full default tile.
+        """
+        cached = self.bucket_configs.get(bucket)
+        if cached is not None:
+            return cached
+        base = self.tile_config or tuning.lookup(
+            "quadform", tuning.shape_key(d=self.d, k=self.num_heads, n=bucket)
+        )
+        cfg = base.clamp_block_n(bucket)
+        self.bucket_configs[bucket] = cfg
+        return cfg
 
     # ------------------------------------------------------------- fast path
 

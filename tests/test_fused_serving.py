@@ -10,6 +10,7 @@ from jax.sharding import Mesh
 
 from repro.core import approximate, backend, decision_function, gamma_max
 from repro.core.maclaurin import ApproxModel
+from repro.kernels.common import TileConfig
 from repro.data.synthetic import make_blobs
 from repro.kernels.quadform.kernel import quadform_heads_pallas
 from repro.kernels.quadform.ref import quadform_heads_ref
@@ -46,7 +47,9 @@ def test_fused_heads_pallas_matches_vmap_reference(K, n, d):
     Z = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32) * 0.5)
     heads = _random_heads(K, d, seed=K)
     s_ref, zsq_ref, v_ref = quadform_heads_ref(Z, *heads)
-    s, zsq, v = quadform_heads_pallas(Z, *heads, block_n=64, interpret=True)
+    s, zsq, v = quadform_heads_pallas(
+        Z, *heads, config=TileConfig(block_n=64), interpret=True
+    )
     np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(zsq), np.asarray(zsq_ref), rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))

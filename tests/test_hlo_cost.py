@@ -6,13 +6,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_cost import analyze_text
+from repro.launch.hlo_cost import analyze_text, normalize_cost_analysis
 
 
 def _cost(f, *sds):
     c = jax.jit(f).lower(*sds).compile()
     ours = analyze_text(c.as_text())
-    theirs = c.cost_analysis()
+    theirs = normalize_cost_analysis(c.cost_analysis())
     return ours, theirs
 
 
@@ -80,8 +80,9 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 import sys
 sys.path.insert(0, "src")
 from repro.launch.hlo_cost import analyze_text
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 
 def f(ws, x):
     def body(x, w):

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.kernels.common import TileConfig
 from repro.kernels.rbf_pred import rbf_predict, rbf_predict_ref
 from repro.kernels.quadform import quadform_predict, quadform_predict_ref
 from repro.kernels.maclaurin_attn import (
@@ -29,7 +30,7 @@ def test_rbf_pred_shapes(n, m, d, dtype):
     X = jnp.asarray(rng.standard_normal((m, d)).astype(dtype))
     a = jnp.asarray(rng.standard_normal(m).astype(dtype))
     ref = rbf_predict_ref(Z, X, a, 0.05, -0.2)
-    out = rbf_predict(Z, X, a, 0.05, -0.2, block_n=32, block_m=64)
+    out = rbf_predict(Z, X, a, 0.05, -0.2, config=TileConfig(block_n=32, block_m=64))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
 
 
@@ -41,7 +42,7 @@ def test_quadform_shapes(n, d):
     M = jnp.asarray((M + M.T) / 2)
     v = jnp.asarray(rng.standard_normal(d).astype(np.float32))
     ref_f, ref_sq = quadform_predict_ref(Z, M, v, 0.7, -0.1, 0.02)
-    out_f, out_sq = quadform_predict(Z, M, v, 0.7, -0.1, 0.02, block_n=64)
+    out_f, out_sq = quadform_predict(Z, M, v, 0.7, -0.1, 0.02, config=TileConfig(block_n=64))
     np.testing.assert_allclose(np.asarray(out_f), np.asarray(ref_f), rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(out_sq), np.asarray(ref_sq), rtol=1e-5, atol=1e-6)
 
@@ -58,7 +59,7 @@ def test_maclaurin_attn_kernel_vs_ref(B, H, T, D, DV, chunk):
     k = jnp.asarray(rng.standard_normal((B, H, T, D)).astype(np.float32)) * 0.3
     v = jnp.asarray(rng.standard_normal((B, H, T, DV)).astype(np.float32))
     ref = maclaurin_attention_ref(q, k, v)
-    out = maclaurin_attention(q, k, v, chunk=chunk)
+    out = maclaurin_attention(q, k, v, config=TileConfig(chunk=chunk))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
 
 
