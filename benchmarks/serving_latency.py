@@ -1,8 +1,11 @@
 """Serving-path latency: engine p50/p99 per shape bucket, fused multi-head
-vs per-head-vmap scaling, and the per-bucket block-size sweep that feeds
-the checked-in tuning table.
+vs per-head-vmap scaling, the approximation-family comparison, and the
+per-bucket block-size sweep that feeds the checked-in tuning table.
 
-Three questions, all measured for real on this host:
+``--smoke`` shrinks repeat counts for CI (same sections, same JSON shape,
+noisier numbers).
+
+Four questions, all measured for real on this host:
 
 1. What end-to-end latency does ``SVMEngine.predict`` deliver per shape
    bucket once warm (zero recompiles)?  p50 is the steady-state cost; p99
@@ -10,7 +13,14 @@ Three questions, all measured for real on this host:
 2. What does fusing K heads into one stacked-Hessian contraction buy over
    the seed's K-pass vmap?  Measured at K in {1, 10} on identical data —
    the ratio is the multiclass serving speedup.
-3. Which tile sizes are fastest per shape bucket?  The sweep times the
+3. Which approximation family serves a given (K, d) cheapest, and at what
+   accuracy?  ``family_compare`` compiles the SAME synthetic model through
+   the maclaurin, poly2 and fourier families (``repro.core.families``),
+   serves each through its engine fast path, and reports p50/p99 next to
+   the measured error vs the exact RBF expansion — the exact path itself
+   is timed as the baseline row. This is the data ``compile_model``'s
+   budget decision is made of, recorded over the trajectory.
+4. Which tile sizes are fastest per shape bucket?  The sweep times the
    DISPATCHED serving primitives over candidate ``TileConfig``s (default
    included, so the recorded pick can only tie or beat it), records the
    winners through ``repro.kernels.common.autotune`` and persists them to
@@ -33,8 +43,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import fmt_table, save_json, timeit
-from repro.core import approximate, backend, gamma_max
-from repro.core.rbf import SVMModel
+from repro.core import approximate, backend, families, gamma_max
+from repro.core.rbf import SVMModel, rbf_kernel
 from repro.kernels.common import TileConfig, autotune, tuning
 from repro.kernels.quadform.ref import quadform_heads_ref
 from repro.serve.svm_engine import SVMEngine, bucket_size
@@ -48,6 +58,23 @@ HEADS_BATCH = 1024
 SWEEP_BUCKETS = [32, 256, 1024]
 SWEEP_BLOCK_N = [64, 128, 256, 512]
 SWEEP_BLOCK_M = [64, 128, 256, 512]
+
+# family_compare grid (ISSUE 3): quadform cost grows as K d^2, RFF as F d —
+# the d axis is where the families cross over.
+FAMILY_HEADS = [1, 10]
+FAMILY_DIMS = [16, 64, 784]
+FAMILY_NSV = 256
+FAMILY_BATCH = 256
+FAMILY_REPEATS = 50
+FAMILY_NUM_FEATURES = 2048
+
+SMOKE = False           # set by --smoke: same sections, fewer repeats
+
+
+def family_num_features() -> int:
+    """One definition for the fourier basis size the comparison runs at,
+    so the measured rows and the recorded JSON meta can never disagree."""
+    return 512 if SMOKE else FAMILY_NUM_FEATURES
 
 
 def _model(seed=0):
@@ -125,6 +152,87 @@ def bench_heads() -> list[dict]:
         })
     print("[serving] fused multi-head vs per-head vmap (best-of-20)")
     print(fmt_table(rows, ["K", "batch", "d", "fused_ms", "vmap_ms", "speedup"]))
+    return rows
+
+
+def bench_family_compare() -> list[dict]:
+    """Approximation families head-to-head on one synthetic model per (K, d).
+
+    Each family's artifact is served through an ``SVMEngine`` with the
+    fallback OFF (pure fast-path latency, including host padding + sync);
+    the exact expansion (shared kernel-matrix GEMM across heads) is the
+    baseline row. Errors are measured against that exact scorer on the
+    same batch the latency is measured on.
+    """
+    repeats = 5 if SMOKE else FAMILY_REPEATS
+    num_features = family_num_features()
+    rows = []
+    for K in FAMILY_HEADS:
+        for d in FAMILY_DIMS:
+            rng = np.random.default_rng(K * 1000 + d)
+            X = rng.standard_normal((FAMILY_NSV, d)).astype(np.float32) * 0.5
+            gamma = float(gamma_max(jnp.asarray(X))) * 0.8
+            if K == 1:
+                ay = rng.standard_normal(FAMILY_NSV).astype(np.float32)
+                b = jnp.float32(0.1)
+            else:
+                ay = rng.standard_normal((K, FAMILY_NSV)).astype(np.float32)
+                b = jnp.asarray(0.1 * rng.standard_normal(K).astype(np.float32))
+            m = SVMModel(X=jnp.asarray(X), alpha_y=jnp.asarray(ay),
+                         b=b, gamma=jnp.float32(gamma))
+            Z = rng.standard_normal((FAMILY_BATCH, d)).astype(np.float32) * 0.3
+
+            ay2 = m.alpha_y if K > 1 else m.alpha_y[None, :]
+            b2 = jnp.reshape(m.b, (K,))
+            exact_step = jax.jit(
+                lambda Zb, X=m.X, g=m.gamma, a=ay2, bb=b2:
+                    rbf_kernel(Zb, X, g) @ a.T + bb[None, :]
+            )
+            exact = np.asarray(exact_step(jnp.asarray(Z)))        # (n, K)
+
+            def timed(fn):
+                fn()                                              # warm
+                times = []
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    fn()
+                    times.append(time.perf_counter() - t0)
+                t = np.asarray(times) * 1e3
+                return (round(float(np.percentile(t, 50)), 4),
+                        round(float(np.percentile(t, 99)), 4))
+
+            for name in ("maclaurin", "poly2", "fourier"):
+                art = families.get_family(name).compile(
+                    m, num_features=num_features
+                )
+                eng = SVMEngine(art, None, allow_fallback=False,
+                                min_bucket=FAMILY_BATCH, max_batch=FAMILY_BATCH)
+                eng.warmup([FAMILY_BATCH])
+                vals = eng.predict(Z)[0]
+                got = vals if K > 1 else vals[:, None]
+                err = np.abs(got - exact)
+                p50, p99 = timed(lambda: eng.predict(Z))
+                rows.append({
+                    "K": K, "d": d, "family": name,
+                    "p50_ms": p50, "p99_ms": p99,
+                    "mean_abs_err": round(float(err.mean()), 6),
+                    "max_abs_err": round(float(err.max()), 6),
+                    "artifact_kb": round(art.nbytes() / 1024, 1),
+                })
+            p50, p99 = timed(
+                lambda: jax.block_until_ready(exact_step(jnp.asarray(Z)))
+            )
+            rows.append({
+                "K": K, "d": d, "family": "exact",
+                "p50_ms": p50, "p99_ms": p99,
+                "mean_abs_err": 0.0, "max_abs_err": 0.0,
+                "artifact_kb": round(
+                    (m.X.size + np.asarray(m.alpha_y).size + 2) * 4 / 1024, 1
+                ),
+            })
+    print("[serving] family comparison (fast path only, fallback off)")
+    print(fmt_table(rows, ["K", "d", "family", "p50_ms", "p99_ms",
+                           "mean_abs_err", "artifact_kb"]))
     return rows
 
 
@@ -210,14 +318,28 @@ def bench_block_sweep() -> list[dict]:
 def run():
     engine_rows, engine_meta = bench_engine()
     head_rows = bench_heads()
+    family_rows = bench_family_compare()
     sweep_rows = bench_block_sweep()
     payload = {
         "host_backend": jax.default_backend(),
         "svm_backend": backend.resolve(),
+        "smoke": SMOKE,
         "model": {"d": D, "n_sv": N_SV},
         "engine": engine_rows,
         "engine_meta": engine_meta,
         "head_scaling": head_rows,
+        "family_compare": {
+            "note": (
+                "engine fast-path p50/p99 (fallback off) and measured error "
+                "vs the exact RBF expansion on the same batch; 'exact' rows "
+                "are the shared kernel-matrix GEMM baseline with zero error "
+                "by definition"
+            ),
+            "batch": FAMILY_BATCH,
+            "n_sv": FAMILY_NSV,
+            "num_features": family_num_features(),
+            "rows": family_rows,
+        },
         "block_sweep": {
             "note": (
                 "tuned = argmin over candidates INCLUDING the default, so "
@@ -234,4 +356,14 @@ def run():
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: same sections and JSON shape, far fewer "
+                         "repeats (numbers are noisy, structure is exercised)")
+    if ap.parse_args().smoke:
+        SMOKE = True
+        REPEATS = 20
+        BATCHES = [1, 64, 256]
     run()

@@ -1,6 +1,11 @@
 """The paper's primary contribution: second-order Maclaurin collapse of
 RBF kernel expansions (exact model -> (c, v, M) quadratic form), with the
-validity bounds of §3.1 and the poly-2 relation of §3.2."""
+validity bounds of §3.1 and the poly-2 relation of §3.2.
+
+The collapse is one member of the pluggable approximation-family layer in
+``repro.core.families`` (maclaurin / poly2 / fourier); ``compile_model``
+there turns any exact model into the cheapest servable artifact meeting
+an accuracy budget."""
 
 from repro.core import backend
 from repro.core.rbf import SVMModel, rbf_kernel, decision_function, predict_labels
@@ -18,9 +23,15 @@ from repro.core.bounds import (
     maclaurin_rel_error,
     validity_fraction,
     REL_ERR_AT_HALF,
+    POLY2_REL_ERR_AT_HALF,
 )
+from repro.core.families import Budget, CompiledArtifact, compile_model
 
 __all__ = [
+    "Budget",
+    "CompiledArtifact",
+    "compile_model",
+    "POLY2_REL_ERR_AT_HALF",
     "SVMModel",
     "rbf_kernel",
     "decision_function",

@@ -1,13 +1,20 @@
 """Backend dispatch for the SVM prediction hot path.
 
-One process-level decision, made here and nowhere else, of HOW the two
+One process-level decision, made here and nowhere else, of HOW the
 serving primitives are evaluated:
 
   * the collapsed quadratic form (Eq 3.8), fused over K heads — the fast
     path of ``approx_decision_function*``, ``approx_ovr_predict`` and the
-    serving engine;
+    maclaurin/poly2 artifact families;
+  * fused random-Fourier-feature scoring (projection + cos + weight dot
+    per Z tile) — the fourier family's fast path;
   * the exact RBF expansion (Eq 3.2) — the engine's accuracy fallback and
     every Table-1/2 oracle.
+
+The FAMILY axis sits one level up: ``family_scores`` dispatches a
+``CompiledArtifact`` (see ``repro.core.families``) to whichever primitive
+its family serves through, so the engine and benchmarks never switch on
+family names themselves.
 
 Backends:
 
@@ -45,6 +52,7 @@ from repro.kernels.common import TileConfig, tuning
 from repro.kernels.quadform.kernel import quadform_heads_pallas
 from repro.kernels.quadform.ref import eq311_valid
 from repro.kernels.rbf_pred.kernel import rbf_predict_pallas
+from repro.kernels.rff_score.kernel import rff_score_pallas
 
 Array = jax.Array
 
@@ -124,6 +132,61 @@ def quadform_heads(Z, M_all, V, c, b, gamma, msq, *, config: TileConfig | None =
             config=config, interpret=_interpret(),
         )
     return quadform_heads_xla(Z, M_all, V, c, b, gamma, msq)
+
+
+# ------------------------------------------------------------ rff scoring
+
+
+def rff_score_xla(Z, W, phase, weights, bias):
+    """RFF scoring as two GEMMs with the cos epilogue between them.
+
+    Identical math to the Pallas kernel; XLA materializes the (n, F)
+    feature block between the projection and the weight contraction,
+    which is fine on CPU/GPU where there is no small fast memory to keep
+    it resident in.
+    """
+    phi = jnp.cos(Z @ W.T + phase[None, :])
+    return phi @ weights.T + bias[None, :]
+
+
+def rff_score(Z, W, phase, weights, bias, *, config: TileConfig | None = None):
+    """Dispatching fused random-Fourier-feature scores.
+
+    Z: (n, d); W: (F, d); phase: (F,); weights: (K, F) with the 2/F
+    feature scaling folded in at compile time; bias: (K,). Returns
+    per-head scores (n, K). ``config=None`` resolves the tuned (or
+    default) ``TileConfig`` for this (d, F, n) bucket.
+    """
+    if config is None:
+        config = tuning.lookup(
+            "rff_score",
+            tuning.shape_key(
+                d=Z.shape[1], f=W.shape[0], n=tuning.bucket(Z.shape[0])
+            ),
+        )
+    if resolve() == "pallas":
+        return rff_score_pallas(
+            Z, W, phase, weights, bias, config=config, interpret=_interpret()
+        )
+    return rff_score_xla(Z, W, phase, weights, bias)
+
+
+# ------------------------------------------------------------- family axis
+
+
+def family_scores(artifact, Z, *, config: TileConfig | None = None):
+    """Score a ``CompiledArtifact`` through its family's serving primitive.
+
+    Returns ``(scores (n, K), valid_rows (n,))`` — the family decides what
+    "valid" means (per-row Eq 3.11 envelope for the quadform families, the
+    compile-time held-out error verdict broadcast over rows for fourier).
+    Thin front door over ``families.score_artifact`` (ONE implementation
+    of the dispatch); the import is deferred because families call back
+    into this module's primitives.
+    """
+    from repro.core import families
+
+    return families.score_artifact(artifact, Z, config=config)
 
 
 # -------------------------------------------------------------- exact RBF

@@ -23,6 +23,25 @@ Array = jax.Array
 # Eq A.2: sup_{|x|<1/2} |(e^x - 1 - x - x^2/2) / e^x| < 0.0305
 REL_ERR_AT_HALF = 0.0305
 
+# The §3.2 analogue for the poly-2 family: approximating e^x by the
+# degree-2 polynomial-kernel expansion (1 + x/2)^2 = 1 + x + x^2/4 under
+# the same |x| < 1/2 envelope. The sup is attained at x = -1/2:
+# |e^{-1/2} - (3/4)^2| / e^{-1/2} = 0.07256... — the poly-2 artifact is
+# cheaper to build (no SV-side exponentials) but ~2.4x looser per term.
+POLY2_REL_ERR_AT_HALF = 0.0726
+
+
+def poly2_exp(x: Array) -> Array:
+    """The poly-2 family's implicit exp approximation: (1 + x/2)^2."""
+    q = 1.0 + 0.5 * x
+    return q * q
+
+
+def poly2_rel_error(x: Array) -> Array:
+    """Absolute relative error of the poly-2 exp approximation (the §3.2
+    analogue of Fig 1; its sup on |x| <= 1/2 is POLY2_REL_ERR_AT_HALF)."""
+    return jnp.abs((jnp.exp(x) - poly2_exp(x)) / jnp.exp(x))
+
 
 def maclaurin_exp(x: Array) -> Array:
     """Second-order Maclaurin series of exp: 1 + x + x^2/2 (Eq A.1)."""

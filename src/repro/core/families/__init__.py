@@ -1,0 +1,70 @@
+"""Pluggable approximation families: compile any SVM into a servable
+artifact.
+
+The paper's Maclaurin collapse is one point in a family of explicit
+kernel approximations that trade construction cost, prediction FLOPs and
+error guarantees differently. This package makes that family axis
+pluggable:
+
+  ===========  =============================  ========================
+  family       prediction cost / row          accuracy contract
+  ===========  =============================  ========================
+  maclaurin    O(K d^2) quadratic form        per-row Eq 3.11 envelope,
+                                              3.05% per-term rel. err
+  poly2        O(K d^2) quadratic form        per-row Eq 3.11 envelope,
+                                              7.26% per-term rel. err
+  fourier      O(F d) dense RFF projection,   compile-time held-out
+               O(F log d) with Fastfood       error estimate
+  ===========  =============================  ========================
+
+Every family compiles an exact ``SVMModel`` (binary or K-head OvR) into
+a ``CompiledArtifact`` — pytree-registered, versioned npz ``save``/
+``load`` — so serving needs no training-side objects. A family module
+exports ``NAME``, ``compile(svm, **opts)``, ``score(artifact, Z,
+config=None)``, ``TILE_KERNEL`` and ``tile_lookup(artifact, bucket)``.
+
+``compile_model(svm, budget)`` is the front door: the §4 verification
+run across all families, returning the cheapest artifact within budget.
+"""
+
+from repro.core.families import fourier, maclaurin, poly2
+from repro.core.families.base import (
+    ARTIFACT_FORMAT_VERSION,
+    CompiledArtifact,
+)
+from repro.core.families.compile import Budget, compile_model
+
+FAMILIES = {
+    maclaurin.NAME: maclaurin,
+    poly2.NAME: poly2,
+    fourier.NAME: fourier,
+}
+
+
+def get_family(name: str):
+    """The family module registered under ``name`` (KeyError lists known)."""
+    try:
+        return FAMILIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown approximation family {name!r}; known: {sorted(FAMILIES)}"
+        ) from None
+
+
+def score_artifact(artifact: CompiledArtifact, Z, *, config=None):
+    """(scores (n, K), valid_rows (n,)) via the artifact's family."""
+    return get_family(artifact.family).score(artifact, Z, config=config)
+
+
+__all__ = [
+    "ARTIFACT_FORMAT_VERSION",
+    "Budget",
+    "CompiledArtifact",
+    "FAMILIES",
+    "compile_model",
+    "fourier",
+    "get_family",
+    "maclaurin",
+    "poly2",
+    "score_artifact",
+]

@@ -1,0 +1,138 @@
+"""``compile_model`` — the paper's §4 verification protocol as the
+entry point of the serving stack.
+
+The paper validates the Maclaurin approximation BEFORE deploying it by
+scoring sample data against the exact model. ``compile_model`` runs that
+protocol across every registered approximation family: compile each
+candidate, measure its error against the exact expansion and its serving
+latency on the live device, and return the CHEAPEST artifact whose
+error meets the budget. The full per-family report ships inside the
+winner's meta (``compile_report``) so the decision is auditable from the
+artifact file alone.
+
+Latency is measured, not modeled (the paper's own methodology — and the
+ordering genuinely differs across hosts: the quadform families win at
+small d, fourier's O(F d) can win at large d where d^2 explodes, and on
+TPU the fused kernels shift the crossover again).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.families.base import CompiledArtifact, stack_heads
+from repro.core.rbf import SVMModel, rbf_kernel
+from repro.kernels.common import autotune
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """The accuracy envelope a servable artifact must meet.
+
+    ``max_err`` bounds the chosen error ``metric`` ("mean_abs" or
+    "max_abs") of family scores vs the exact expansion on the
+    verification sample. ``relative=True`` scales the bound by the mean
+    |exact score| so one budget works across differently-scaled models.
+    """
+
+    max_err: float
+    metric: str = "mean_abs"
+    relative: bool = False
+
+    def __post_init__(self):
+        if self.metric not in ("mean_abs", "max_abs"):
+            raise ValueError(f"unknown budget metric {self.metric!r}")
+
+    def limit(self, exact_scale: float) -> float:
+        return self.max_err * (exact_scale if self.relative else 1.0)
+
+
+def compile_model(
+    svm: SVMModel,
+    budget: Budget,
+    *,
+    sample=None,
+    sample_n: int = 256,
+    families: tuple[str, ...] | None = None,
+    seed: int = 0,
+    family_opts: dict | None = None,
+    timing_repeats: int = 5,
+) -> CompiledArtifact:
+    """Compile ``svm`` under every candidate family; return the fastest
+    artifact meeting ``budget`` on the verification sample.
+
+    ``sample=None`` synthesizes held-out points around the support
+    vectors (``fourier.holdout_sample`` — deterministic in ``seed``).
+    ``family_opts`` maps family name -> extra compile kwargs (e.g.
+    ``{"fourier": {"num_features": 4096, "structured": True}}``).
+    Raises ``ValueError`` listing every measured error when no family
+    fits the budget — the caller's recourse is a bigger fourier basis, a
+    looser budget, or serving the exact model.
+    """
+    from repro.core import families as _families
+
+    names = families or tuple(_families.FAMILIES)
+    opts = family_opts or {}
+
+    if sample is None:
+        sample = _families.fourier.holdout_sample(svm, seed, sample_n)
+    Z = jnp.asarray(np.asarray(sample, np.float32))
+
+    ay2, b, _, _ = stack_heads(svm)
+    exact = rbf_kernel(Z, svm.X, svm.gamma) @ ay2.T + b[None, :]   # (n, K)
+    exact_scale = float(jnp.mean(jnp.abs(exact)))
+    limit = budget.limit(exact_scale)
+
+    report = []
+    candidates: list[tuple[float, CompiledArtifact]] = []
+    for name in names:
+        fam = _families.get_family(name)
+        # caller opts override the defaults (so family_opts={'fourier':
+        # {'seed': 7}} is legal); the shared sample doubles as fourier's
+        # held-out set so it is not regenerated and re-scored inside
+        # compile. Families that need neither absorb them via **_opts.
+        art = fam.compile(
+            svm, **{"seed": seed, "holdout": np.asarray(Z), **opts.get(name, {})}
+        )
+        scores, _ = fam.score(art, Z)
+        err = jnp.abs(scores - exact)
+        measured = {
+            "mean_abs": float(jnp.mean(err)),
+            "max_abs": float(jnp.max(err)),
+        }
+        step = jax.jit(lambda Zb, _f=fam, _a=art: _f.score(_a, Zb)[0])
+        latency_ms = 1e3 * autotune.measure(
+            lambda: step(Z), repeats=timing_repeats, warmup=2
+        )
+        ok = measured[budget.metric] <= limit
+        report.append({
+            "family": name,
+            **measured,
+            "latency_ms": round(latency_ms, 4),
+            "artifact_bytes": art.nbytes(),
+            "meets_budget": ok,
+        })
+        if ok:
+            candidates.append((latency_ms, art))
+
+    if not candidates:
+        raise ValueError(
+            f"no family meets {budget} (limit {limit:.4g}) on the "
+            f"verification sample: "
+            + ", ".join(f"{r['family']}: {r[budget.metric]:.4g}" for r in report)
+        )
+    latency_ms, winner = min(candidates, key=lambda t: t[0])
+    return winner.with_meta(
+        compile_report={
+            "budget": dataclasses.asdict(budget),
+            "limit": limit,
+            "exact_mean_abs_score": exact_scale,
+            "sample_n": int(Z.shape[0]),
+            "families": report,
+            "chosen": winner.family,
+        }
+    )

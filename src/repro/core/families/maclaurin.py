@@ -1,0 +1,102 @@
+"""The ``maclaurin`` family — the paper's §3 quadratic-form collapse as a
+compiled artifact.
+
+Compiles an exact RBF ``SVMModel`` (binary or K-head OvR) into the
+(c, v, M) quadratic form of Eq 3.8 and serves it through the fused
+``quadform_heads`` backend path. Prediction is O(K d^2) per row,
+independent of n_sv; validity is the per-row Eq 3.11 envelope with the
+paper's 3.05% per-term relative-error guarantee
+(``bounds.REL_ERR_AT_HALF``).
+
+Artifact layout (all f32):
+
+    M (K, d, d)  stacked Hessians        c, b, gamma, msq (K,) scalars
+    v (K, d)     gradient terms
+
+``from_approx`` wraps an already-built ``ApproxModel`` (the pre-families
+API) into the same artifact so existing callers keep working.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend
+from repro.core.bounds import REL_ERR_AT_HALF
+from repro.core.families.base import CompiledArtifact, base_meta, stack_heads
+from repro.core.maclaurin import ApproxModel, approximate
+from repro.core.rbf import SVMModel
+from repro.kernels.common import TileConfig, tuning
+
+NAME = "maclaurin"
+TILE_KERNEL = "quadform"        # tuning-registry family the scorer keys on
+
+
+def compile(svm: SVMModel, **_opts) -> CompiledArtifact:      # noqa: A001
+    """Collapse every head of ``svm`` (Eq 3.7); one GEMM per head."""
+    ay2, b, k, multiclass = stack_heads(svm)
+
+    def one(ay_k, b_k):
+        return approximate(SVMModel(X=svm.X, alpha_y=ay_k, b=b_k, gamma=svm.gamma))
+
+    return _quadform_artifact(
+        NAME, jax.vmap(one)(ay2, b), multiclass, rel_err_at_half=REL_ERR_AT_HALF
+    )
+
+
+def from_approx(approx: ApproxModel) -> CompiledArtifact:
+    """Wrap a (possibly vmap-stacked) ``ApproxModel`` without recomputing."""
+    multiclass = approx.v.ndim == 2
+    stacked = approx if multiclass else jax.tree_util.tree_map(
+        lambda x: jnp.asarray(x)[None], approx
+    )
+    return _quadform_artifact(
+        NAME, stacked, multiclass, rel_err_at_half=REL_ERR_AT_HALF
+    )
+
+
+def _quadform_artifact(
+    family: str, stacked: ApproxModel, multiclass: bool, **extra_meta
+) -> CompiledArtifact:
+    """Shared packer for every quadratic-form family (maclaurin, poly2)."""
+    k, d = stacked.v.shape
+    flat = lambda x: jnp.reshape(jnp.asarray(x, jnp.float32), (k,))
+    arrays = {
+        "M": jnp.asarray(stacked.M, jnp.float32),
+        "v": jnp.asarray(stacked.v, jnp.float32),
+        "c": flat(stacked.c),
+        "b": flat(stacked.b),
+        "gamma": flat(stacked.gamma),
+        "msq": flat(stacked.max_sv_sq_norm),
+    }
+    return CompiledArtifact(
+        family=family,
+        arrays=arrays,
+        meta=base_meta(
+            d=d, num_heads=k, multiclass=multiclass,
+            kind="quadform", validity="per-row", **extra_meta,
+        ),
+    )
+
+
+def score(
+    artifact: CompiledArtifact, Z, *, config: TileConfig | None = None
+):
+    """(scores (n, K), valid_rows (n,)) through the fused quadform path.
+
+    ``valid_rows[i]`` is the Eq 3.11 envelope check over ALL heads — a row
+    is servable by the fast path only if every head's bound holds.
+    """
+    a = artifact.arrays
+    scores, _, valid = backend.quadform_heads(
+        Z, a["M"], a["v"], a["c"], a["b"], a["gamma"], a["msq"], config=config
+    )
+    return scores, jnp.all(valid, axis=-1)
+
+
+def tile_lookup(artifact: CompiledArtifact, bucket: int) -> tuple[str, str]:
+    """(kernel, shape_key) the tuning registry resolves for this bucket."""
+    return TILE_KERNEL, tuning.shape_key(
+        d=artifact.d, k=artifact.num_heads, n=bucket
+    )

@@ -83,6 +83,42 @@ def collapse(model: Poly2Model) -> ApproxModel:
     )
 
 
+@jax.jit
+def collapse_rbf_as_poly2(model) -> ApproxModel:
+    """Approximate an exact RBF model by the §3.2 poly-2 expansion.
+
+    The remark under Eq 3.16 run in reverse: fold the SV-side exponential
+    into the support values (``equivalent_poly2_alphas``), expand
+    e^{2 gamma x^T z} as (1 + gamma x^T z)^2 — the beta = 1 poly-2 kernel —
+    and KEEP the exp(-gamma ||z||^2) envelope:
+
+        f(z) ~ e^{-g||z||^2} sum_i a_i' (1 + 2 g x_i^T z + g^2 (x_i^T z)^2) + b
+
+        c = sum_i a_i',  w_i = 2 gamma a_i',  D_ii = gamma^2 a_i'
+
+    Identical serving cost to the Maclaurin collapse (same quadratic form,
+    same Eq 3.11 envelope check) but the per-term relative error bound is
+    ``POLY2_REL_ERR_AT_HALF`` (7.26%) instead of 3.05% — the second-order
+    coefficient is x^2/4, not x^2/2. This is the second point of the
+    approximation-family axis, not a replacement for ``collapse`` (which
+    is the EXACT collapse of a genuinely poly-2-trained model).
+    """
+    X, gamma = model.X, model.gamma
+    sv_sq = jnp.sum(X * X, axis=-1)
+    a2 = equivalent_poly2_alphas(model.alpha_y, sv_sq, gamma)
+    c = jnp.sum(a2)
+    v = X.T @ (2.0 * gamma * a2)
+    M = jnp.einsum("i,ij,ik->jk", gamma**2 * a2, X, X)
+    return ApproxModel(
+        c=c,
+        v=v,
+        M=M,
+        b=model.b,
+        gamma=gamma,                       # envelope + Eq 3.11 check stay live
+        max_sv_sq_norm=jnp.max(sv_sq),
+    )
+
+
 def equivalent_poly2_alphas(alpha_y_rbf: Array, sv_sq_norms: Array, gamma: Array) -> Array:
     """The paper's remark: alpha_i^(2D) = alpha_i^(RBF) e^{-gamma ||x_i||^2}.
 

@@ -25,7 +25,9 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import threading
+import warnings
 
 import jax
 
@@ -36,8 +38,13 @@ TABLE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "tuning_ta
 DEFAULTS: dict[str, TileConfig] = {
     "quadform": TileConfig(block_n=512),
     "rbf_pred": TileConfig(block_n=256, block_m=256),
+    "rff_score": TileConfig(block_n=256),
     "maclaurin_attn": TileConfig(chunk=128),
 }
+
+# Canonical shape_key grammar: underscore-joined <dims><int> groups, e.g.
+# "d64_k10_n1024" (whatever shape_key() can emit).
+_KEY_RE = re.compile(r"^[a-z]+\d+(?:_[a-z]+\d+)*$")
 
 _lock = threading.Lock()
 _overrides: dict[tuple[str, str, str], dict] = {}
@@ -80,11 +87,73 @@ def _read_table(path: str) -> dict:
         return {"version": 1, "entries": {}}
 
 
+def validate_table(table: dict, *, origin: str = "tuning table") -> dict:
+    """Drop malformed entries, warning once per problem instead of letting a
+    corrupt checked-in table surface later as a KeyError / TypeError deep in
+    a trace. Checks, per ``entries.<platform>.<kernel>.<key>``:
+
+      * the kernel is a known family (has a ``DEFAULTS`` entry);
+      * the key matches the ``shape_key`` grammar;
+      * the entry carries a ``config`` dict that ``TileConfig`` accepts.
+
+    Returns a NEW table containing only the surviving entries (input is
+    not mutated); table-level shape problems reset to an empty table.
+    """
+    if not isinstance(table, dict) or not isinstance(table.get("entries", {}), dict):
+        warnings.warn(f"{origin}: top-level structure malformed; ignoring table")
+        return {"version": 1, "entries": {}}
+    clean: dict = {"version": table.get("version", 1), "entries": {}}
+    for plat, kernels in table.get("entries", {}).items():
+        if not isinstance(kernels, dict):
+            warnings.warn(f"{origin}: platform {plat!r} entries malformed; dropped")
+            continue
+        for kernel, keys in kernels.items():
+            if kernel not in DEFAULTS:
+                warnings.warn(
+                    f"{origin}: unknown kernel {kernel!r} under {plat!r} "
+                    f"(known: {sorted(DEFAULTS)}); dropped"
+                )
+                continue
+            if not isinstance(keys, dict):
+                warnings.warn(f"{origin}: {plat}/{kernel} entries malformed; dropped")
+                continue
+            for key, entry in keys.items():
+                if not _KEY_RE.match(key):
+                    warnings.warn(
+                        f"{origin}: malformed shape_key {key!r} under "
+                        f"{plat}/{kernel}; dropped"
+                    )
+                    continue
+                cfg = entry.get("config") if isinstance(entry, dict) else None
+                if not isinstance(cfg, dict):
+                    warnings.warn(
+                        f"{origin}: entry {plat}/{kernel}/{key} has no "
+                        f"config dict; dropped"
+                    )
+                    continue
+                try:
+                    TileConfig.from_json(cfg)
+                except (TypeError, ValueError) as e:
+                    warnings.warn(
+                        f"{origin}: bad config for {plat}/{kernel}/{key} "
+                        f"({e}); dropped"
+                    )
+                    continue
+                clean["entries"].setdefault(plat, {}).setdefault(kernel, {})[key] = entry
+    return clean
+
+
+def load_table(path: str = TABLE_PATH) -> dict:
+    """Read + validate a tuning table file (malformed entries are dropped
+    with a warning; a missing/unreadable file is an empty table)."""
+    return validate_table(_read_table(path), origin=path)
+
+
 def _load_table() -> dict:
     """The checked-in default table, read once per process (lookup tier 2)."""
     global _table_cache
     if _table_cache is None:
-        _table_cache = _read_table(TABLE_PATH)
+        _table_cache = load_table(TABLE_PATH)
     return _table_cache
 
 

@@ -1,0 +1,4 @@
+from repro.kernels.rff_score.kernel import rff_score_pallas
+from repro.kernels.rff_score.ref import rff_score_ref
+
+__all__ = ["rff_score_pallas", "rff_score_ref"]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused random-Fourier-feature scoring kernel.
+
+The fourier family serves
+
+    f_k(z) = w_k . cos(W z + p) + b_k
+
+where W (n_feat, d) are the sampled frequencies, p (n_feat,) the phases
+and w_k the per-head weights with the 2 / n_feat feature scaling already
+folded in at compile time (see ``repro.core.families.fourier``). The
+oracle is the obviously-correct three-op formulation the fused kernel and
+the XLA backend path are tested against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rff_score_ref(Z, W, phase, weights, bias):
+    """Z: (n, d), W: (F, d), phase: (F,), weights: (K, F), bias: (K,).
+
+    Returns per-head scores (n, K).
+    """
+    proj = Z @ W.T + phase[None, :]          # (n, F)
+    phi = jnp.cos(proj)                      # feature scale folded into weights
+    return phi @ weights.T + bias[None, :]   # (n, K)

@@ -1,9 +1,13 @@
 """Production SVM prediction engine — the paper's application layer (§5).
 
 A stream of feature vectors needs decision values at minimum latency
-(object detection under heavy traffic). The engine serves the APPROXIMATED
-model (O(d^2)/instance, paper Eq 3.8) through the fused multi-head backend
-path and enforces the paper's accuracy contract at run time. Design:
+(object detection under heavy traffic). The engine serves a compiled
+approximation ARTIFACT — any ``repro.core.families`` family: the paper's
+Maclaurin quadratic form, the §3.2 poly-2 expansion, or random Fourier
+features — through that family's fused backend path, and enforces the
+family's accuracy contract at run time. A bare ``ApproxModel`` is still
+accepted (wrapped into a maclaurin artifact), so pre-families callers
+keep working. Design:
 
 Shape buckets, bounded jit cache
   Traffic arrives with arbitrary batch sizes; naive jit would recompile
@@ -17,17 +21,18 @@ Shape buckets, bounded jit cache
 
 Per-bucket tile tuning
   Each bucket resolves its own ``TileConfig`` at trace time from the
-  ``repro.kernels.common.tuning`` registry (measured entry for this
-  (d, K, bucket) on this platform if the checked-in table has one, else
-  the kernel default), so ``warmup()`` precompiles the TUNED variant of
-  every bucket, not one fixed block size. Resolved configs are kept in
-  ``bucket_configs`` for observability; an explicit ``tile_config``
-  argument pins all buckets (A/B runs).
+  ``repro.kernels.common.tuning`` registry, keyed on the FAMILY's serving
+  kernel (``quadform`` for maclaurin/poly2, ``rff_score`` for fourier)
+  and shape bucket — a measured entry from the checked-in table if there
+  is one, else the kernel default — so ``warmup()`` precompiles the TUNED
+  variant of every bucket, not one fixed block size. Resolved configs are
+  kept in ``bucket_configs`` for observability; an explicit
+  ``tile_config`` argument pins all buckets (A/B runs).
 
 One fused compiled step
   The step scores ALL K heads with a single backend call (one pallas_call
-  on TPU / one stacked-Hessian GEMM under XLA — not K vmapped passes), and
-  fuses the Eq 3.11 row-validity reduction and the multiclass argmax (or
+  on TPU / one or two GEMMs under XLA — not K vmapped passes), and fuses
+  the family's row-validity computation and the multiclass argmax (or
   binary sign) into the same executable. K = 1 is just the smallest stack.
 
 Deferred synchronization
@@ -37,15 +42,20 @@ Deferred synchronization
   not one per batch. ``predict`` is the synchronous convenience wrapper.
 
 Exact fallback (bounded-accuracy serving)
-  The Eq 3.11 bound is checked per instance at zero extra cost (||z||^2 is
-  a by-product of the envelope). Rows that violate it are re-scored with
-  the exact expansion via the streaming ``rbf_pred`` path (Pallas kernel
-  on TPU: SV tiles streamed flash-attention style, never materializing the
-  (n, n_sv) kernel matrix). With a ``mesh``, the support vectors are
-  sharded across devices (shard_map + psum over the first mesh axis) so
-  arbitrarily large exact models serve the slow path too. The paper
-  recommends adhering to the bound; the fallback is our beyond-paper
-  extension for inputs outside the verified envelope.
+  Each family defines what "inside the accuracy contract" means. The
+  quadform families check the Eq 3.11 bound per instance at zero extra
+  cost (||z||^2 is a by-product of the envelope); the fourier family has
+  no per-row envelope — its contract is the compile-time held-out error
+  estimate, so validity is a per-ARTIFACT verdict broadcast over the
+  batch (violating artifacts send every row down the exact path). Invalid
+  rows are re-scored with the exact expansion via the streaming
+  ``rbf_pred`` path (Pallas kernel on TPU: SV tiles streamed
+  flash-attention style, never materializing the (n, n_sv) kernel
+  matrix). With a ``mesh``, the support vectors are sharded across
+  devices (shard_map + psum over the first mesh axis) so arbitrarily
+  large exact models serve the slow path too. The paper recommends
+  adhering to the bound; the fallback is our beyond-paper extension for
+  inputs outside the verified envelope.
 
 Statistics are kept for observability (fallback rate, padding overhead,
 bucket histogram, compile count).
@@ -60,7 +70,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import backend
+from repro.core import backend, families
+from repro.core.families import CompiledArtifact
 from repro.core.maclaurin import ApproxModel
 from repro.core.rbf import SVMModel
 from repro.kernels.common import TileConfig, tuning
@@ -138,7 +149,7 @@ class EngineResult:
 class SVMEngine:
     def __init__(
         self,
-        approx: ApproxModel,
+        model: CompiledArtifact | ApproxModel,
         exact: SVMModel | None = None,
         *,
         allow_fallback: bool = True,
@@ -149,11 +160,23 @@ class SVMEngine:
     ):
         if min_bucket & (min_bucket - 1) or max_batch & (max_batch - 1):
             raise ValueError("min_bucket and max_batch must be powers of two")
-        self.approx = approx
+        if isinstance(model, CompiledArtifact):
+            self.artifact = model
+            self.approx = None                 # pre-families accessor
+        elif isinstance(model, ApproxModel):
+            self.artifact = families.maclaurin.from_approx(model)
+            self.approx = model
+        else:
+            raise TypeError(
+                f"SVMEngine serves a CompiledArtifact (or a legacy "
+                f"ApproxModel), got {type(model).__name__}"
+            )
+        self._family = families.get_family(self.artifact.family)
+        self.family = self.artifact.family
         self.exact = exact
-        self.multiclass = approx.v.ndim == 2
-        self.num_heads = approx.v.shape[0] if self.multiclass else 1
-        self.d = approx.v.shape[-1]
+        self.multiclass = self.artifact.multiclass
+        self.num_heads = self.artifact.num_heads
+        self.d = self.artifact.d
         self.allow_fallback = allow_fallback and exact is not None
         self.min_bucket = min_bucket
         self.max_batch = max_batch
@@ -161,24 +184,16 @@ class SVMEngine:
         self.bucket_configs: dict[int, TileConfig] = {}
         self.stats = EngineStats()
 
-        # Model weights are closed over -> baked into the executable as
-        # constants; only the padded batch is an argument (and is donated
+        # The artifact's arrays are closed over -> baked into the executable
+        # as constants; only the padded batch is an argument (and is donated
         # where the backend supports aliasing).
-        M_all = approx.M if self.multiclass else approx.M[None]
-        V = approx.v if self.multiclass else approx.v[None]
-        heads = tuple(
-            jnp.reshape(x, (self.num_heads,))
-            for x in (approx.c, approx.b, approx.gamma, approx.max_sv_sq_norm)
-        )
+        artifact = self.artifact
 
         def _step(Zp):
             # Runs once per bucket (at trace time): resolve this bucket's
             # tuned tile sizes, so warmup() precompiles tuned variants.
             cfg = self._resolve_tile_config(Zp.shape[0])
-            scores, _, valid = backend.quadform_heads(
-                Zp, M_all, V, *heads, config=cfg
-            )
-            valid_row = jnp.all(valid, axis=-1)            # (B,)
+            scores, valid_row = self._family.score(artifact, Zp, config=cfg)
             if self.multiclass:
                 labels = jnp.argmax(scores, axis=-1)       # fused argmax
             else:
@@ -195,17 +210,21 @@ class SVMEngine:
         """The TileConfig this shape bucket's compiled step uses.
 
         Explicit ``tile_config`` pins every bucket; otherwise the tuning
-        registry is consulted per (d, K, bucket) — a measured entry from
-        the checked-in table (written by the serving-latency block sweep)
-        or the quadform default. block_n is clamped to the bucket so tiny
-        buckets never pad up to a full default tile.
+        registry is consulted for the FAMILY's serving kernel and this
+        bucket's shape key (``quadform``/(d, K, bucket) for the quadratic
+        forms, ``rff_score``/(d, F, bucket) for fourier) — a measured
+        entry from the checked-in table (written by the serving-latency
+        block sweep) or the kernel default. block_n is clamped to the
+        bucket so tiny buckets never pad up to a full default tile.
         """
         cached = self.bucket_configs.get(bucket)
         if cached is not None:
             return cached
-        base = self.tile_config or tuning.lookup(
-            "quadform", tuning.shape_key(d=self.d, k=self.num_heads, n=bucket)
-        )
+        if self.tile_config is not None:
+            base = self.tile_config
+        else:
+            kernel, key = self._family.tile_lookup(self.artifact, bucket)
+            base = tuning.lookup(kernel, key)
         cfg = base.clamp_block_n(bucket)
         self.bucket_configs[bucket] = cfg
         return cfg

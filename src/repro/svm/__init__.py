@@ -1,5 +1,11 @@
 from repro.svm.lssvm import train_lssvm
 from repro.svm.dual import train_svc
-from repro.svm.multiclass import train_one_vs_rest, ovr_predict
+from repro.svm.multiclass import compile_ovr, train_one_vs_rest, ovr_predict
 
-__all__ = ["train_lssvm", "train_svc", "train_one_vs_rest", "ovr_predict"]
+__all__ = [
+    "train_lssvm",
+    "train_svc",
+    "train_one_vs_rest",
+    "ovr_predict",
+    "compile_ovr",
+]

@@ -78,3 +78,16 @@ def approx_ovr_scores(approx: ApproxModel, Z: Array) -> Array:
 @jax.jit
 def approx_ovr_predict(approx: ApproxModel, Z: Array) -> Array:
     return jnp.argmax(approx_ovr_scores(approx, Z), axis=-1)
+
+
+def compile_ovr(model: SVMModel, family: str = "maclaurin", **opts):
+    """Compile an OvR ensemble into a servable K-head artifact.
+
+    Thin convenience over ``repro.core.families``: every family compiles
+    the (K, n_sv) alpha stack of ``train_one_vs_rest`` directly (shared X,
+    one artifact, fused K-head serving) — pass the artifact to
+    ``SVMEngine`` or ``CompiledArtifact.save`` it for a serving process.
+    """
+    from repro.core import families
+
+    return families.get_family(family).compile(model, **opts)

@@ -1,0 +1,391 @@
+"""The pluggable approximation-family layer: CompiledArtifact save/load
+(deterministic bytes, versioning), every family served through the same
+SVMEngine API, compile_model budget selection, the fourier global
+fallback, and the error-bound property of each family (hypothesis when
+available, seeded sweep otherwise)."""
+
+import json
+import subprocess
+import sys
+import zipfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Budget, CompiledArtifact, backend, compile_model, gamma_max
+from repro.core.families import FAMILIES, fourier, get_family, maclaurin, score_artifact
+from repro.core.rbf import SVMModel, decision_function, rbf_kernel
+from repro.kernels.common import TileConfig
+from repro.kernels.rff_score.kernel import rff_score_pallas
+from repro.kernels.rff_score.ref import rff_score_ref
+from repro.serve.svm_engine import SVMEngine
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # container baseline
+    HAVE_HYPOTHESIS = False
+
+
+def _svm(seed=0, d=8, n_sv=60, heads=None, scale=0.6):
+    """Deterministic small model straight from an rng (no training)."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n_sv, d)).astype(np.float32) * scale
+    gamma = float(gamma_max(jnp.asarray(X))) * 0.8
+    if heads is None:
+        ay = rng.standard_normal(n_sv).astype(np.float32) * 0.5
+        b = jnp.float32(0.1)
+    else:
+        ay = rng.standard_normal((heads, n_sv)).astype(np.float32) * 0.5
+        b = jnp.asarray(0.1 * rng.standard_normal(heads).astype(np.float32))
+    return SVMModel(X=jnp.asarray(X), alpha_y=jnp.asarray(ay),
+                    b=b, gamma=jnp.float32(gamma))
+
+
+def _exact_scores(m, Z):
+    """(n, K) exact per-head scores for binary or OvR models."""
+    ay2 = m.alpha_y if m.alpha_y.ndim == 2 else m.alpha_y[None, :]
+    b2 = jnp.reshape(m.b, (ay2.shape[0],))
+    return np.asarray(rbf_kernel(Z, m.X, m.gamma) @ ay2.T + b2[None, :])
+
+
+# ---------------------------------------------------------------- artifacts
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_artifact_save_load_roundtrip(family, tmp_path):
+    m = _svm(3)
+    art = get_family(family).compile(m, num_features=256)
+    path = str(tmp_path / f"{family}.npz")
+    art.save(path)
+    back = CompiledArtifact.load(path)
+    assert back.family == art.family
+    assert back.meta == art.meta
+    assert set(back.arrays) == set(art.arrays)
+    for k in art.arrays:
+        np.testing.assert_array_equal(np.asarray(back.arrays[k]),
+                                      np.asarray(art.arrays[k]))
+
+
+def test_artifact_bytes_identical_across_processes(tmp_path):
+    """Same model + seed => BIT-IDENTICAL artifact files, even from a fresh
+    interpreter (content-addressable artifact stores depend on this)."""
+    import os
+
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "src")
+    here = str(tmp_path / "here.npz")
+    there = str(tmp_path / "there.npz")
+    # must construct the identical model _svm(11, d=6, n_sv=24) builds
+    prog = (
+        f"import sys; sys.path.insert(0, {src!r})\n"
+        "import numpy as np, jax.numpy as jnp\n"
+        "from repro.core import gamma_max\n"
+        "from repro.core.rbf import SVMModel\n"
+        "from repro.core.families import fourier\n"
+        "rng = np.random.default_rng(11)\n"
+        "X = rng.standard_normal((24, 6)).astype(np.float32) * 0.6\n"
+        "gamma = float(gamma_max(jnp.asarray(X))) * 0.8\n"
+        "ay = rng.standard_normal(24).astype(np.float32) * 0.5\n"
+        "m = SVMModel(X=jnp.asarray(X), alpha_y=jnp.asarray(ay),\n"
+        "             b=jnp.float32(0.1), gamma=jnp.float32(gamma))\n"
+        f"fourier.compile(m, num_features=64, seed=4).save({there!r})\n"
+    )
+    fourier.compile(_svm(11, d=6, n_sv=24), num_features=64, seed=4).save(here)
+    proc = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                          text=True)
+    assert proc.returncode == 0, proc.stderr
+    with open(here, "rb") as a, open(there, "rb") as b:
+        assert a.read() == b.read()
+
+
+def test_artifact_rejects_future_format_version(tmp_path):
+    import io
+
+    from repro.core.families import base
+
+    path = str(tmp_path / "art.npz")
+    maclaurin.compile(_svm(5)).save(path)
+    # forge a copy whose header claims a future format version
+    with np.load(path) as z:
+        header = json.loads(bytes(z["__artifact__"]).decode())
+        members = {k: z[k].copy() for k in header["keys"]}
+    header["format_version"] = 999
+    forged = str(tmp_path / "future.npz")
+    with zipfile.ZipFile(forged, "w", zipfile.ZIP_STORED) as zf:
+        payload = np.frombuffer(json.dumps(header).encode(), np.uint8)
+        for name, arr in {"__artifact__": payload, **members}.items():
+            buf = io.BytesIO()
+            np.lib.format.write_array(buf, arr, allow_pickle=False)
+            base._write_member(zf, name + ".npy", buf.getvalue())
+    with pytest.raises(ValueError, match="newer than this reader"):
+        CompiledArtifact.load(forged)
+    # and a plain npz that was never an artifact is rejected too
+    plain = str(tmp_path / "plain.npz")
+    np.savez(plain, x=np.zeros(3))
+    with pytest.raises(ValueError, match="not a CompiledArtifact"):
+        CompiledArtifact.load(plain)
+
+
+def test_artifact_is_pytree():
+    art = maclaurin.compile(_svm(1))
+    leaves = jax.tree_util.tree_leaves(art)
+    assert len(leaves) == len(art.arrays)
+    moved = jax.tree_util.tree_map(lambda x: x * 1.0, art)
+    assert isinstance(moved, CompiledArtifact)
+    assert moved.family == art.family and moved.meta == art.meta
+
+
+# ------------------------------------------------------- engine, per family
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("heads", [None, 3])
+def test_engine_serves_every_family(family, heads):
+    """One submit/predict API across maclaurin, poly2 and fourier, binary
+    and multiclass — engine output equals the family's direct score."""
+    m = _svm(7, heads=heads)
+    art = get_family(family).compile(m, num_features=256)
+    eng = SVMEngine(art, m, min_bucket=32, max_batch=64)
+    rng = np.random.default_rng(0)
+    Z = rng.standard_normal((41, 8)).astype(np.float32) * 0.3
+    vals, valid = eng.predict(Z)
+    direct, _ = score_artifact(art, jnp.asarray(Z))
+    direct = np.asarray(direct)
+    want = direct if heads else direct[:, 0]
+    got = vals.copy()
+    if valid.any():
+        np.testing.assert_allclose(got[valid], want[valid], rtol=1e-5, atol=1e-5)
+    labels = eng.predict_labels(Z)
+    if heads:
+        assert vals.shape == (41, 3) and labels.shape == (41,)
+    else:
+        assert set(np.unique(labels)) <= {-1, 1}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_engine_bit_identical_after_reload(family, tmp_path):
+    """compile -> save -> load -> serve produces the SAME bits as serving
+    the in-memory artifact (the npz round-trip is exact for f32/int32)."""
+    m = _svm(9, heads=2)
+    art = get_family(family).compile(m, num_features=128)
+    path = str(tmp_path / "a.npz")
+    art.save(path)
+    rng = np.random.default_rng(1)
+    Z = rng.standard_normal((37, 8)).astype(np.float32) * 0.3
+    a = SVMEngine(art, None, min_bucket=32, max_batch=64).predict(Z)
+    b = SVMEngine(CompiledArtifact.load(path), None,
+                  min_bucket=32, max_batch=64).predict(Z)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_fourier_global_fallback_and_quadform_row_fallback():
+    """The two validity regimes: fourier's held-out verdict is per
+    ARTIFACT (tolerance violated => every row re-scored exactly), the
+    quadform families' Eq 3.11 envelope is per ROW."""
+    m = _svm(13)
+    bad = fourier.compile(m, num_features=8, err_tolerance=1e-12)
+    assert bad.meta["valid_globally"] is False
+    eng = SVMEngine(bad, m)
+    rng = np.random.default_rng(2)
+    Z = rng.standard_normal((17, 8)).astype(np.float32) * 0.3
+    vals, valid = eng.predict(Z)
+    assert not valid.any() and eng.stats.fallback_rate == 1.0
+    np.testing.assert_allclose(
+        vals, np.asarray(decision_function(m, jnp.asarray(Z))),
+        rtol=1e-4, atol=1e-4,
+    )
+    # quadform: only the out-of-envelope rows fall back
+    art = maclaurin.compile(m)
+    eng2 = SVMEngine(art, m)
+    Zmix = np.concatenate([Z[:5], 50.0 * Z[:3]])
+    _, valid2 = eng2.predict(Zmix)
+    assert valid2[:5].all() and not valid2[5:].any()
+
+
+# ------------------------------------------------------------ compile_model
+
+
+def test_compile_model_meets_budget_and_reports():
+    m = _svm(21, d=10, n_sv=80)
+    art = compile_model(m, Budget(max_err=0.05, metric="mean_abs"), seed=3)
+    rep = art.meta["compile_report"]
+    assert rep["chosen"] == art.family
+    rows = {r["family"]: r for r in rep["families"]}
+    assert set(rows) == set(FAMILIES)
+    assert rows[art.family]["meets_budget"]
+    assert rows[art.family]["mean_abs"] <= rep["limit"]
+    # chosen is the fastest among budget-meeting candidates
+    ok = [r for r in rep["families"] if r["meets_budget"]]
+    assert rows[art.family]["latency_ms"] == min(r["latency_ms"] for r in ok)
+    # the artifact actually serves
+    eng = SVMEngine(art, m)
+    vals, _ = eng.predict(np.asarray(m.X[:9]))
+    assert vals.shape == (9,)
+
+
+def test_compile_model_impossible_budget_raises():
+    m = _svm(22)
+    with pytest.raises(ValueError, match="no family meets"):
+        compile_model(m, Budget(max_err=1e-12, metric="max_abs"), seed=1)
+
+
+def test_budget_validates_metric():
+    with pytest.raises(ValueError):
+        Budget(max_err=0.1, metric="p99")
+
+
+def test_compile_model_family_opts_can_override_defaults():
+    """family_opts entries (including 'seed' and 'holdout', which
+    compile_model also sets) override, not collide."""
+    m = _svm(23, d=6, n_sv=30)
+    art = compile_model(
+        m, Budget(max_err=10.0), seed=1,
+        families=("fourier",),
+        family_opts={"fourier": {"seed": 7, "num_features": 32}},
+    )
+    assert art.meta["seed"] == 7 and art.meta["num_features"] == 32
+
+
+def test_backend_family_scores_matches_score_artifact():
+    """backend's family-axis front door is the same dispatch."""
+    m = _svm(24)
+    art = maclaurin.compile(m)
+    Z = jnp.asarray(np.asarray(m.X[:7]))
+    s1, v1 = backend.family_scores(art, Z)
+    s2, v2 = score_artifact(art, Z)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_bound_constants_are_the_sups():
+    """The per-term constants both families report are the numerical sups
+    of their exp-approximation relative errors on the Eq 3.9 envelope."""
+    from repro.core import POLY2_REL_ERR_AT_HALF, REL_ERR_AT_HALF
+    from repro.core.bounds import maclaurin_rel_error, poly2_rel_error
+
+    x = jnp.linspace(-0.5, 0.5, 20001)
+    for rel_err, const in ((maclaurin_rel_error, REL_ERR_AT_HALF),
+                           (poly2_rel_error, POLY2_REL_ERR_AT_HALF)):
+        sup = float(jnp.max(rel_err(x)))
+        assert sup <= const                      # the constant is a bound...
+        assert sup >= const - 5e-4               # ...and a tight one
+
+
+# ----------------------------------------------------------- rff primitives
+
+
+@pytest.mark.parametrize("n,d,f,k", [(5, 7, 33, 1), (64, 128, 96, 4), (130, 20, 256, 3)])
+def test_rff_score_pallas_matches_ref(n, d, f, k):
+    """Padded-everything edge shapes through the fused kernel (interpret)."""
+    rng = np.random.default_rng(n + d + f)
+    Z = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    W = jnp.asarray(rng.standard_normal((f, d)).astype(np.float32) * 0.3)
+    phase = jnp.asarray(rng.uniform(0, 2 * np.pi, f).astype(np.float32))
+    wt = jnp.asarray(rng.standard_normal((k, f)).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.standard_normal(k).astype(np.float32))
+    got = rff_score_pallas(Z, W, phase, wt, b,
+                           config=TileConfig(block_n=32), interpret=True)
+    want = rff_score_ref(Z, W, phase, wt, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rff_backend_dispatch_pallas_vs_xla():
+    prev = backend.set_backend("pallas")
+    try:
+        rng = np.random.default_rng(0)
+        Z = jnp.asarray(rng.standard_normal((40, 12)).astype(np.float32))
+        W = jnp.asarray(rng.standard_normal((64, 12)).astype(np.float32) * 0.3)
+        phase = jnp.asarray(rng.uniform(0, 2 * np.pi, 64).astype(np.float32))
+        wt = jnp.asarray(rng.standard_normal((2, 64)).astype(np.float32))
+        b = jnp.zeros((2,), jnp.float32)
+        got = backend.rff_score(Z, W, phase, wt, b)
+    finally:
+        backend.set_backend(prev or "auto")
+    want = backend.rff_score_xla(Z, W, phase, wt, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fastfood_projection_matches_implicit_dense_w():
+    """The structured transform IS a linear map: projecting the identity
+    recovers the implicit W, and the fastfood score path equals dense RFF
+    scoring with that W."""
+    m = _svm(31, d=6, n_sv=24)
+    art = fourier.compile(m, num_features=64, structured=True, seed=2)
+    assert art.meta["projection"] == "fastfood"
+    a = art.arrays
+    W_implicit = np.asarray(fourier._fastfood_project(
+        jnp.eye(6, dtype=jnp.float32), a["ff_b"], a["ff_g"],
+        a["ff_perm"], a["ff_scale"],
+    )).T                                                      # (F, d)
+    rng = np.random.default_rng(3)
+    Z = jnp.asarray(rng.standard_normal((9, 6)).astype(np.float32))
+    scores, _ = fourier.score(art, Z)
+    want = rff_score_ref(Z, jnp.asarray(W_implicit), a["phase"],
+                         a["weights"], a["b"])
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # W entries should look N(0, 2 gamma): check the variance within 25%
+    g = float(m.gamma)
+    assert abs(W_implicit.std() ** 2 - 2 * g) / (2 * g) < 0.25
+
+
+# ------------------------------------------------------ error-bound property
+
+
+def _check_family_bound(seed: int):
+    """Every family's measured error respects its reported bound.
+
+    quadform families: on Eq 3.11-valid rows, |f_hat - f| is bounded by
+    rel_err_at_half * sum_i |alpha_i| K(x_i, z) (the per-term relative
+    bound summed through the triangle inequality).
+    fourier: the held-out error regenerated from the artifact's seed
+    matches the estimate shipped in the meta.
+    """
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(2, 9))
+    n_sv = int(rng.integers(4, 24))
+    m = _svm(seed, d=d, n_sv=n_sv, scale=float(rng.uniform(0.3, 1.0)))
+    Z = jnp.asarray(rng.standard_normal((24, d)).astype(np.float32)
+                    * rng.uniform(0.1, 0.6))
+    exact = _exact_scores(m, Z)[:, 0]
+    ay_abs = np.abs(np.asarray(m.alpha_y))
+    K_mat = np.asarray(rbf_kernel(Z, m.X, m.gamma))           # (n, n_sv)
+    term_budget = K_mat @ ay_abs                              # sum_i |a_i| K_i(z)
+
+    for name in ("maclaurin", "poly2"):
+        art = get_family(name).compile(m)
+        scores, valid = score_artifact(art, Z)
+        scores, valid = np.asarray(scores)[:, 0], np.asarray(valid)
+        if not valid.any():
+            continue
+        bound = art.meta["rel_err_at_half"] * term_budget[valid] + 1e-4
+        assert (np.abs(scores[valid] - exact[valid]) <= bound).all(), (
+            f"{name} bound violated at seed {seed}"
+        )
+
+    art = fourier.compile(m, num_features=128, seed=seed)
+    Zh = jnp.asarray(fourier.holdout_sample(m, seed))
+    approx, _ = fourier.score(art, Zh)
+    err = np.abs(np.asarray(approx) - _exact_scores(m, Zh))
+    assert err.max() <= art.meta["holdout_max_abs_err"] * (1 + 1e-5) + 1e-6
+    assert abs(err.mean() - art.meta["holdout_mean_abs_err"]) <= 1e-5
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_family_error_respects_reported_bound(seed):
+        _check_family_bound(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_family_error_respects_reported_bound(seed):
+        _check_family_bound(seed)

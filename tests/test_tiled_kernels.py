@@ -134,6 +134,49 @@ def test_tuning_table_roundtrip(tmp_path):
     assert tuning.lookup("rbf_pred", "d100_m512_n256") == tuning.DEFAULTS["rbf_pred"]
 
 
+def test_load_table_validates_and_roundtrips(tmp_path):
+    """save_table -> load_table round-trips clean entries; malformed keys,
+    unknown kernels and bad configs are dropped with a warning instead of
+    surfacing later as a KeyError mid-trace."""
+    path = str(tmp_path / "table.json")
+    tuned = TileConfig(block_n=64)
+    tuning.record("quadform", "d64_k1_n256", tuned, measured_ms=0.25,
+                  platform_name="cpu")
+    tuning.save_table(path)
+    table = tuning.load_table(path)                       # clean: no warning
+    entry = table["entries"]["cpu"]["quadform"]["d64_k1_n256"]
+    assert TileConfig.from_json(entry["config"]) == tuned
+
+    # corrupt the file with every malformation class
+    table["entries"]["cpu"]["not_a_kernel"] = {"d64_n32": {"config": {"block_n": 8}}}
+    table["entries"]["cpu"]["rbf_pred"] = {
+        "TOTALLY wrong key!": {"config": {"block_n": 8}},     # bad key
+        "d64_m512_n256": {"config": {"block_n": -5}},         # bad config value
+        "d32_m512_n256": {"note": "no config at all"},        # missing config
+        "d16_m512_n256": {"config": {"block_n": 128}},        # survivor
+    }
+    with open(path, "w") as f:
+        json.dump(table, f)
+    with pytest.warns(UserWarning) as warned:
+        clean = tuning.load_table(path)
+    assert len(warned) == 4
+    assert "not_a_kernel" not in clean["entries"]["cpu"]
+    assert set(clean["entries"]["cpu"]["rbf_pred"]) == {"d16_m512_n256"}
+    # the pre-existing good entry survives validation untouched
+    assert clean["entries"]["cpu"]["quadform"]["d64_k1_n256"] == entry
+
+
+def test_load_table_rejects_malformed_top_level(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        json.dump({"entries": ["this", "is", "not", "a", "dict"]}, f)
+    with pytest.warns(UserWarning, match="top-level structure"):
+        assert tuning.load_table(path) == {"version": 1, "entries": {}}
+    with open(path, "w") as f:
+        f.write("{ not json")
+    assert tuning.load_table(path) == {"version": 1, "entries": {}}
+
+
 def test_autotune_picks_fastest_and_records():
     key = "unit_test_key"
     seen = []
