@@ -1,11 +1,14 @@
 """Serving-path latency: engine p50/p99 per shape bucket, fused multi-head
-vs per-head-vmap scaling, the approximation-family comparison, and the
-per-bucket block-size sweep that feeds the checked-in tuning table.
+vs per-head-vmap scaling, the approximation-family comparison, the
+per-bucket block-size sweep that feeds the checked-in tuning table, and
+the multi-tenant runtime's coalesced-vs-per-request throughput.
 
 ``--smoke`` shrinks repeat counts for CI (same sections, same JSON shape,
-noisier numbers).
+noisier numbers). Naming sections (e.g. ``runtime_throughput``) runs only
+those and MERGES them into the existing results JSON, so a partial rerun
+never clobbers the other sections' trajectory.
 
-Four questions, all measured for real on this host:
+Five questions, all measured for real on this host:
 
 1. What end-to-end latency does ``SVMEngine.predict`` deliver per shape
    bucket once warm (zero recompiles)?  p50 is the steady-state cost; p99
@@ -29,6 +32,13 @@ Four questions, all measured for real on this host:
    the spread there is timing noise and the table entry simply pins the
    default-equivalent winner; on a TPU host the same sweep produces real
    per-bucket Pallas tilings.
+5. What does micro-batching buy under concurrent traffic?
+   ``runtime_throughput`` drives the multi-tenant ``Runtime`` with
+   open-loop concurrent clients issuing small (4-row) requests and
+   compares coalesced throughput against the same clients calling
+   ``engine.predict`` per request (closed loop) — the scheduler must win
+   at >= 8 clients, with ZERO steady-state recompiles (asserted via
+   ``jit_cache_size`` before/after the stress).
 
 Emits BENCH_serving.json (benchmarks/common.save_json) so later perf PRs
 have a trajectory to compare against.
@@ -36,16 +46,20 @@ have a trajectory to compare against.
 
 from __future__ import annotations
 
+import json
+import os
+import threading
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import fmt_table, save_json, timeit
+from benchmarks.common import RESULTS_DIR, fmt_table, save_json, timeit
 from repro.core import approximate, backend, families, gamma_max
 from repro.core.rbf import SVMModel, rbf_kernel
 from repro.kernels.common import TileConfig, autotune, tuning
+from repro.serve.runtime import Runtime
 from repro.kernels.quadform.ref import quadform_heads_ref
 from repro.serve.svm_engine import SVMEngine, bucket_size
 
@@ -67,6 +81,14 @@ FAMILY_NSV = 256
 FAMILY_BATCH = 256
 FAMILY_REPEATS = 50
 FAMILY_NUM_FEATURES = 2048
+
+# runtime_throughput: open-loop clients x small requests through the
+# micro-batching Runtime vs per-request engine.predict
+RUNTIME_CLIENTS = [1, 8, 32]
+RUNTIME_REQS_PER_CLIENT = 80
+RUNTIME_REQ_ROWS = 4
+RUNTIME_FLUSH_ROWS = 256
+RUNTIME_MAX_WAIT_US = 1000.0
 
 SMOKE = False           # set by --smoke: same sections, fewer repeats
 
@@ -315,20 +337,160 @@ def bench_block_sweep() -> list[dict]:
     return rows
 
 
-def run():
-    engine_rows, engine_meta = bench_engine()
-    head_rows = bench_heads()
-    family_rows = bench_family_compare()
-    sweep_rows = bench_block_sweep()
-    payload = {
+def bench_runtime_throughput() -> dict:
+    """Coalesced micro-batching vs per-request ``engine.predict`` under
+    concurrent clients, through the multi-tenant ``Runtime``.
+
+    Two models are registered (multi-tenant setup); the measured traffic
+    targets the primary alias. The per-request baseline is CLOSED loop
+    (each client blocks on its own ``predict``, the pre-runtime serving
+    pattern); the runtime path is OPEN loop (clients enqueue all their
+    requests, then materialize the futures) — exactly the concurrency the
+    scheduler exists to exploit. The engine's bounded-compile guarantee
+    must survive coalescing: ``jit_cache_size`` is asserted unchanged
+    across the whole stress.
+    """
+    reqs = 10 if SMOKE else RUNTIME_REQS_PER_CLIENT
+    m, m2 = _model(), _model(seed=7)
+    art = families.maclaurin.compile(m)
+    art2 = families.maclaurin.compile(m2)
+    rt = Runtime(
+        max_wait_us=RUNTIME_MAX_WAIT_US,
+        flush_rows=RUNTIME_FLUSH_ROWS,
+        engine_opts=dict(min_bucket=32, max_batch=1024),
+    )
+    rt.publish("primary", art, exact=m)
+    rt.publish("secondary", art2, exact=m2)
+    rt.warmup("primary")
+    rt.warmup("secondary")
+    digest, engine = rt.registry.get_engine("primary")
+    cache_before = engine.jit_cache_size()
+
+    rng = np.random.default_rng(11)
+    rows = []
+    for clients in RUNTIME_CLIENTS:
+        work = [
+            [rng.standard_normal((RUNTIME_REQ_ROWS, D)).astype(np.float32) * 0.3
+             for _ in range(reqs)]
+            for _ in range(clients)
+        ]
+        total_rows = clients * reqs * RUNTIME_REQ_ROWS
+
+        def fan_out(target):
+            threads = [threading.Thread(target=target, args=(w,)) for w in work]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            return time.perf_counter() - t0
+
+        # baseline: per-request predict, closed loop (pre-runtime pattern)
+        def per_request(batches):
+            for Z in batches:
+                engine.predict(Z)
+
+        t_direct = fan_out(per_request)
+
+        # runtime: open-loop submits, one shared sync per coalesced flush
+        before = rt.stats("primary")
+
+        def coalesced(batches):
+            futs = [rt.submit("primary", Z) for Z in batches]
+            for f in futs:
+                f.result().values
+
+        t_runtime = fan_out(coalesced)
+        after = rt.stats("primary")
+
+        d_reqs = after["requests"] - before["requests"]
+        d_flushes = max(1, after["flushes"] - before["flushes"])
+        rows.append({
+            "clients": clients,
+            "requests": clients * reqs,
+            "rows": total_rows,
+            "per_request_rows_s": round(total_rows / t_direct, 1),
+            "coalesced_rows_s": round(total_rows / t_runtime, 1),
+            "speedup": round(t_direct / t_runtime, 2),
+            "coalescing_factor": round(d_reqs / d_flushes, 2),
+            "p50_ms": after["latency"]["p50_ms"],
+            "p99_ms": after["latency"]["p99_ms"],
+        })
+
+    cache_after = engine.jit_cache_size()
+    assert cache_after == cache_before, (
+        f"coalescing must not add compiled variants "
+        f"({cache_before} -> {cache_after})"
+    )
+    snap = rt.stats("primary")
+    meta = {
+        "req_rows": RUNTIME_REQ_ROWS,
+        "flush_rows": RUNTIME_FLUSH_ROWS,
+        "max_wait_us": RUNTIME_MAX_WAIT_US,
+        "models_registered": 2,
+        "steady_state_recompiles": cache_after - cache_before,
+        "jit_variants": cache_after,
+        "fallback_rate": snap["fallback_rate"],
+    }
+    rt.close()
+    print("[serving] runtime throughput: coalesced vs per-request predict")
+    print(fmt_table(rows, ["clients", "requests", "per_request_rows_s",
+                           "coalesced_rows_s", "speedup", "coalescing_factor",
+                           "p99_ms"]))
+    print(f"[serving] {meta}")
+    return {
+        "note": (
+            "open-loop concurrent clients submitting 4-row requests through "
+            "Runtime (coalesced into bucket-sized engine steps) vs the same "
+            "clients calling engine.predict per request (closed loop); "
+            "steady_state_recompiles must be 0"
+        ),
+        "rows": rows,
+        "meta": meta,
+    }
+
+
+SECTIONS = (
+    "engine",
+    "head_scaling",
+    "family_compare",
+    "block_sweep",
+    "runtime_throughput",
+)
+
+
+def run(sections: list[str] | None = None):
+    chosen = set(sections) if sections else set(SECTIONS)
+    unknown = chosen - set(SECTIONS)
+    if unknown:
+        raise SystemExit(f"unknown sections {sorted(unknown)}; "
+                         f"known: {sorted(SECTIONS)}")
+
+    # partial runs merge over the existing results file so a targeted rerun
+    # (e.g. CI's `runtime_throughput --smoke`) keeps the other trajectories
+    payload = {}
+    existing = os.path.join(RESULTS_DIR, "BENCH_serving.json")
+    if chosen != set(SECTIONS) and os.path.exists(existing):
+        try:
+            with open(existing) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+
+    payload.update({
         "host_backend": jax.default_backend(),
         "svm_backend": backend.resolve(),
         "smoke": SMOKE,
         "model": {"d": D, "n_sv": N_SV},
-        "engine": engine_rows,
-        "engine_meta": engine_meta,
-        "head_scaling": head_rows,
-        "family_compare": {
+    })
+    if "engine" in chosen:
+        engine_rows, engine_meta = bench_engine()
+        payload["engine"] = engine_rows
+        payload["engine_meta"] = engine_meta
+    if "head_scaling" in chosen:
+        payload["head_scaling"] = bench_heads()
+    if "family_compare" in chosen:
+        payload["family_compare"] = {
             "note": (
                 "engine fast-path p50/p99 (fallback off) and measured error "
                 "vs the exact RBF expansion on the same batch; 'exact' rows "
@@ -338,18 +500,20 @@ def run():
             "batch": FAMILY_BATCH,
             "n_sv": FAMILY_NSV,
             "num_features": family_num_features(),
-            "rows": family_rows,
-        },
-        "block_sweep": {
+            "rows": bench_family_compare(),
+        }
+    if "block_sweep" in chosen:
+        payload["block_sweep"] = {
             "note": (
                 "tuned = argmin over candidates INCLUDING the default, so "
                 "tuned_ms <= default_ms by construction; on non-TPU hosts "
                 "the dispatched path is XLA and the spread is noise"
             ),
             "platform": tuning.platform(),
-            "rows": sweep_rows,
-        },
-    }
+            "rows": bench_block_sweep(),
+        }
+    if "runtime_throughput" in chosen:
+        payload["runtime_throughput"] = bench_runtime_throughput()
     path = save_json("BENCH_serving.json", payload)
     print(f"[serving] wrote {path}")
     return payload
@@ -359,11 +523,16 @@ if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("sections", nargs="*", choices=[[], *sorted(SECTIONS)],
+                    help="sections to (re)run and merge into the results "
+                         "JSON; default: all")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: same sections and JSON shape, far fewer "
                          "repeats (numbers are noisy, structure is exercised)")
-    if ap.parse_args().smoke:
+    args = ap.parse_args()
+    if args.smoke:
         SMOKE = True
         REPEATS = 20
         BATCHES = [1, 64, 256]
-    run()
+        RUNTIME_CLIENTS = [1, 8]
+    run(args.sections or None)

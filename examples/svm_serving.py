@@ -20,6 +20,10 @@ backend path, and enforces the family's accuracy contract at run time
 held-out estimate for fourier), re-scoring violating rows exactly.
 
     PYTHONPATH=src python examples/svm_serving.py
+
+This demo serves ONE model to ONE caller; for the multi-tenant layer —
+content-addressed registry, alias hot-swap, async micro-batching across
+concurrent clients — see ``examples/svm_runtime.py``.
 """
 
 import os

@@ -29,6 +29,7 @@ scoring dispatches on ``artifact.family`` (see ``score_artifact``).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import io
 import json
 import zipfile
@@ -83,8 +84,13 @@ class CompiledArtifact:
 
     # ------------------------------------------------------------- persistence
 
-    def save(self, path: str) -> str:
-        """Write a deterministic versioned ``.npz``; returns ``path``."""
+    def to_bytes(self) -> bytes:
+        """The deterministic versioned ``.npz`` bytes ``save`` writes.
+
+        Same model + seed ⇒ bit-identical bytes across processes (pinned
+        zip metadata), so these bytes — not the object identity — are the
+        canonical identity of a compiled model. ``digest()`` hashes them.
+        """
         header = json.dumps(
             {
                 "format_version": ARTIFACT_FORMAT_VERSION,
@@ -97,11 +103,27 @@ class CompiledArtifact:
         members = {_HEADER_MEMBER: np.frombuffer(header, dtype=np.uint8)}
         for name in sorted(self.arrays):
             members[name] = np.ascontiguousarray(self.arrays[name])
-        with zipfile.ZipFile(path, "w", zipfile.ZIP_STORED) as zf:
+        out = io.BytesIO()
+        with zipfile.ZipFile(out, "w", zipfile.ZIP_STORED) as zf:
             for name, arr in members.items():
                 buf = io.BytesIO()
                 np.lib.format.write_array(buf, arr, allow_pickle=False)
                 _write_member(zf, name + ".npy", buf.getvalue())
+        return out.getvalue()
+
+    def digest(self) -> str:
+        """SHA-256 hex digest of ``to_bytes()`` — the content address.
+
+        save → load → save round-trips to the SAME digest (tested), so an
+        artifact registry can dedupe identical compiles and key a store on
+        the digest regardless of which process produced the file.
+        """
+        return hashlib.sha256(self.to_bytes()).hexdigest()
+
+    def save(self, path: str) -> str:
+        """Write a deterministic versioned ``.npz``; returns ``path``."""
+        with open(path, "wb") as f:
+            f.write(self.to_bytes())
         return path
 
     @classmethod

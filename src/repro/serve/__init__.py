@@ -1,11 +1,22 @@
 from repro.serve.decode_step import make_serve_step, make_prefill_step
-from repro.serve.svm_engine import EngineResult, EngineStats, SVMEngine, bucket_size
+from repro.serve.runtime import ArtifactRegistry, MicroBatcher, Runtime
+from repro.serve.svm_engine import (
+    EngineResult,
+    EngineStats,
+    SliceResult,
+    SVMEngine,
+    bucket_size,
+)
 
 __all__ = [
     "make_serve_step",
     "make_prefill_step",
+    "ArtifactRegistry",
+    "MicroBatcher",
+    "Runtime",
     "SVMEngine",
     "EngineResult",
     "EngineStats",
+    "SliceResult",
     "bucket_size",
 ]

@@ -1,0 +1,32 @@
+"""Multi-tenant serving runtime: many models × many concurrent callers.
+
+The layer the ROADMAP's "heavy traffic from millions of users" target
+needs on top of ``SVMEngine``:
+
+  * ``ArtifactRegistry`` — content-addressed model store (SHA-256 of the
+    deterministic artifact bytes), named aliases with atomic hot-swap,
+    lazy directory loads, LRU engine eviction under a memory budget;
+  * ``MicroBatcher`` — async scheduler coalescing concurrent small
+    requests into the engine's power-of-two buckets (flush on bucket
+    fill or ``max_wait_us`` deadline), scattering results back to
+    per-request futures without losing the engine's deferred-sync or
+    zero-recompile properties;
+  * ``Runtime`` — the front door (``submit(model, Z) -> future``),
+    per-model telemetry (p50/p99, queue depth, coalescing factor,
+    fallback rate, evictions).
+"""
+
+from repro.serve.runtime.registry import ArtifactRegistry, RegistryEntry
+from repro.serve.runtime.runtime import Runtime
+from repro.serve.runtime.scheduler import BatcherClosed, MicroBatcher
+from repro.serve.runtime.telemetry import LatencyWindow, ModelTelemetry
+
+__all__ = [
+    "ArtifactRegistry",
+    "BatcherClosed",
+    "LatencyWindow",
+    "MicroBatcher",
+    "ModelTelemetry",
+    "RegistryEntry",
+    "Runtime",
+]

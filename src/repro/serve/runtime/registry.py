@@ -1,0 +1,291 @@
+"""``ArtifactRegistry`` — a content-addressed, multi-tenant model store.
+
+PR 3 made ``CompiledArtifact.save`` byte-deterministic precisely so a
+store could key on content; this module is that store. Identity is the
+SHA-256 of the artifact's deterministic bytes (``CompiledArtifact
+.digest()``), which means:
+
+  * **dedupe for free** — registering the same compile twice (same model,
+    same seed, any process) lands on one entry, one engine, one copy of
+    the arrays in memory;
+  * **lazy directory loads** — a directory of ``.npz`` artifacts is
+    indexed by hashing FILE bytes (``save`` writes exactly
+    ``to_bytes()``, so the file hash IS the artifact digest) without
+    deserializing a single array; arrays load on first use;
+  * **aliases** — mutable names (``mnist@latest``) over immutable
+    digests, git-tag style. ``set_alias`` is atomic under the registry
+    lock: a reader resolves either the old digest or the new one, never
+    a torn state, and in-flight requests hold a reference to the OLD
+    engine so a hot-swap never yanks a model mid-batch.
+  * **LRU engine eviction** — built engines (compiled steps + device
+    arrays) are the expensive part; under a ``memory_budget_bytes`` cap
+    the registry drops the least-recently-used cold engines. An entry
+    backed by a file also drops its arrays (reloadable); an in-memory
+    registration keeps them (they are the only copy). Eviction never
+    touches the entry's identity — the digest and aliases survive, and
+    the next use transparently reloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import os
+import threading
+
+from repro.core.families import CompiledArtifact
+from repro.serve.svm_engine import SVMEngine
+
+_DIGEST_LEN = 64           # sha256 hex
+
+
+@dataclasses.dataclass
+class RegistryEntry:
+    """One immutable model identity and its (re)loadable serving state."""
+
+    digest: str
+    path: str | None = None                 # reload source for lazy/evicted
+    artifact: CompiledArtifact | None = None
+    exact: object | None = None             # SVMModel for the exact fallback
+    engine: SVMEngine | None = None
+    nbytes: int = 0                         # artifact array bytes once known
+    tick: int = 0                           # LRU clock stamp
+    evictions: int = 0
+    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+
+
+class ArtifactRegistry:
+    def __init__(
+        self,
+        *,
+        memory_budget_bytes: int | None = None,
+        warmup_on_load: bool = True,
+        engine_opts: dict | None = None,
+    ):
+        self.memory_budget_bytes = memory_budget_bytes
+        self.warmup_on_load = warmup_on_load
+        self.engine_opts = dict(engine_opts or {})
+        self._entries: dict[str, RegistryEntry] = {}
+        self._aliases: dict[str, str] = {}
+        self._lock = threading.RLock()
+        self._clock = itertools.count(1)
+        self._evict_listeners: list = []
+        self.loads = 0                       # engine builds (incl. reloads)
+        self.hits = 0                        # get_engine served from memory
+        self.eviction_count = 0
+
+    def add_evict_listener(self, fn) -> None:
+        """``fn(digest)`` fires after an engine eviction, OUTSIDE the
+        registry lock — the hook ``Runtime`` uses to retire the digest's
+        batcher so eviction actually releases the engine's memory (an
+        idle batcher would otherwise pin it forever)."""
+        self._evict_listeners.append(fn)
+
+    # -------------------------------------------------------------- indexing
+
+    def register(
+        self,
+        artifact: CompiledArtifact,
+        *,
+        alias: str | None = None,
+        exact=None,
+        path: str | None = None,
+    ) -> str:
+        """Index ``artifact`` under its content digest; returns the digest.
+
+        Re-registering an identical compile is a no-op on the entry
+        (dedupe); ``alias``/``exact``/``path`` still update, so a caller
+        can attach a fallback model or a name to an existing digest.
+        """
+        digest = artifact.digest()
+        with self._lock:
+            entry = self._entries.get(digest)
+            if entry is None:
+                entry = RegistryEntry(digest=digest, artifact=artifact)
+                self._entries[digest] = entry
+            elif entry.artifact is None:
+                entry.artifact = artifact
+            if exact is not None:
+                entry.exact = exact
+            if path is not None:
+                entry.path = path
+            if alias is not None:
+                self._aliases[alias] = digest
+        return digest
+
+    def add_file(self, path: str, *, alias: str | None = None, exact=None) -> str:
+        """Index one saved artifact WITHOUT loading its arrays.
+
+        ``save`` writes exactly ``to_bytes()``, so hashing the file bytes
+        yields the same digest ``artifact.digest()`` would — content
+        addressing straight off the filesystem.
+        """
+        h = hashlib.sha256()
+        with open(path, "rb") as f:
+            for block in iter(lambda: f.read(1 << 20), b""):
+                h.update(block)
+        digest = h.hexdigest()
+        with self._lock:
+            entry = self._entries.get(digest)
+            if entry is None:
+                entry = RegistryEntry(digest=digest, path=path)
+                self._entries[digest] = entry
+            elif entry.path is None:
+                entry.path = path
+            if exact is not None:
+                entry.exact = exact
+            if alias is not None:
+                self._aliases[alias] = digest
+        return digest
+
+    def add_directory(self, dirpath: str, *, tag: str = "latest") -> dict[str, str]:
+        """Lazily index every ``*.npz`` under ``dirpath``.
+
+        Each file gets the alias ``<stem>@<tag>`` (stems sorted, so a
+        duplicated stem deterministically resolves to the lexicographically
+        last file). Returns ``{alias: digest}`` for what was indexed.
+        """
+        added: dict[str, str] = {}
+        for name in sorted(os.listdir(dirpath)):
+            if not name.endswith(".npz"):
+                continue
+            stem = name[: -len(".npz")]
+            alias = f"{stem}@{tag}"
+            added[alias] = self.add_file(os.path.join(dirpath, name), alias=alias)
+        return added
+
+    # --------------------------------------------------------------- aliases
+
+    def set_alias(self, alias: str, ref: str) -> str:
+        """Atomically point ``alias`` at ``ref`` (digest or other alias).
+
+        This is the hot-swap primitive: publish the new artifact (its
+        digest is already immutable in the store), then flip the alias.
+        Readers between the two states see a complete old model or a
+        complete new model; requests already holding the old engine
+        finish on it untouched.
+        """
+        with self._lock:
+            digest = self.resolve(ref)
+            self._aliases[alias] = digest
+            return digest
+
+    def publish(self, alias: str, artifact: CompiledArtifact, *, exact=None) -> str:
+        """Register + flip ``alias`` in one atomic step; returns the digest."""
+        with self._lock:
+            return self.register(artifact, alias=alias, exact=exact)
+
+    def aliases(self) -> dict[str, str]:
+        with self._lock:
+            return dict(self._aliases)
+
+    def resolve(self, ref: str) -> str:
+        """``ref`` → digest: exact digest, alias, ``ref@latest``, or a
+        unique digest prefix (git-style)."""
+        with self._lock:
+            if len(ref) == _DIGEST_LEN and ref in self._entries:
+                return ref
+            if ref in self._aliases:
+                return self._aliases[ref]
+            tagged = f"{ref}@latest"
+            if tagged in self._aliases:
+                return self._aliases[tagged]
+            matches = [d for d in self._entries if d.startswith(ref)]
+            if len(matches) == 1:
+                return matches[0]
+            if len(matches) > 1:
+                raise KeyError(f"ambiguous model ref {ref!r} ({len(matches)} matches)")
+            raise KeyError(
+                f"unknown model ref {ref!r}; known aliases: {sorted(self._aliases)}"
+            )
+
+    # --------------------------------------------------------------- serving
+
+    def get_engine(self, ref: str) -> tuple[str, SVMEngine]:
+        """(digest, ready engine) for ``ref``; loads/builds/warms on miss.
+
+        The build happens under the ENTRY lock, not the registry lock, so
+        warming one cold model never stalls lookups of hot ones.
+        """
+        with self._lock:
+            digest = self.resolve(ref)
+            entry = self._entries[digest]
+            entry.tick = next(self._clock)
+            engine = entry.engine
+        if engine is not None:
+            self.hits += 1                   # approximate under race; fine
+            return digest, engine
+        with entry.lock:
+            engine = entry.engine                # re-check under the build lock
+            if engine is None:
+                artifact = entry.artifact
+                if artifact is None:
+                    if entry.path is None:
+                        raise RuntimeError(
+                            f"entry {digest[:12]} has no artifact and no path"
+                        )
+                    artifact = CompiledArtifact.load(entry.path)
+                engine = SVMEngine(artifact, entry.exact, **self.engine_opts)
+                if self.warmup_on_load:
+                    engine.warmup()
+                with self._lock:
+                    entry.artifact = artifact
+                    entry.nbytes = artifact.nbytes()
+                    entry.engine = engine
+                    self.loads += 1
+        self._evict_to_budget(keep=digest)
+        return digest, engine
+
+    def loaded_bytes(self) -> int:
+        with self._lock:
+            return sum(e.nbytes for e in self._entries.values() if e.engine is not None)
+
+    def _evict_to_budget(self, keep: str | None = None) -> int:
+        """Drop LRU engines until loaded bytes fit the budget; returns count.
+
+        The entry most recently touched (``keep``) is never evicted — the
+        budget is a pressure valve, not a correctness gate, and evicting
+        the model being served would thrash.
+        """
+        if self.memory_budget_bytes is None:
+            return 0
+        evicted: list[str] = []
+        with self._lock:
+            loaded = [e for e in self._entries.values() if e.engine is not None]
+            total = sum(e.nbytes for e in loaded)
+            for entry in sorted(loaded, key=lambda e: e.tick):
+                if total <= self.memory_budget_bytes:
+                    break
+                if entry.digest == keep:
+                    continue
+                entry.engine = None
+                if entry.path is not None:
+                    entry.artifact = None    # reloadable: drop the arrays too
+                entry.evictions += 1
+                total -= entry.nbytes
+                evicted.append(entry.digest)
+                self.eviction_count += 1
+        for digest in evicted:               # listeners run outside the lock
+            for fn in self._evict_listeners:
+                fn(digest)
+        return len(evicted)
+
+    # ------------------------------------------------------------- telemetry
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "models": len(self._entries),
+                "loaded": sum(
+                    1 for e in self._entries.values() if e.engine is not None
+                ),
+                "loaded_bytes": sum(
+                    e.nbytes for e in self._entries.values() if e.engine is not None
+                ),
+                "memory_budget_bytes": self.memory_budget_bytes,
+                "loads": self.loads,
+                "hits": self.hits,
+                "evictions": self.eviction_count,
+                "aliases": dict(self._aliases),
+            }

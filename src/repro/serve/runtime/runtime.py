@@ -1,0 +1,185 @@
+"""``Runtime`` — the multi-tenant serving front door.
+
+One object per server process:
+
+    rt = Runtime(memory_budget_bytes=256 << 20)
+    rt.publish("detector", artifact, exact=svm)      # or load_directory(...)
+    fut = rt.submit("detector", Z)                   # async, coalesced
+    values = fut.result().values                     # one shared host sync
+
+``submit(model, Z)`` resolves ``model`` through the ``ArtifactRegistry``
+(digest, alias, ``name@latest``, digest prefix), lazily builds + warms
+the model's ``SVMEngine``, and enqueues the rows on that model's
+``MicroBatcher``. Because batchers are keyed on the immutable DIGEST,
+alias hot-swaps compose naturally: after ``publish`` flips an alias,
+new submits route to the new digest's batcher while requests already
+queued on the old digest drain on the old engine — no lock spans a
+batch, nothing is torn.
+
+``predict`` is the synchronous convenience (submit + materialize), and
+``stats()`` exports the whole telemetry tree: per-model scheduler +
+engine counters, plus the registry's load/eviction/alias state.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.core.families import CompiledArtifact
+from repro.serve.runtime.registry import ArtifactRegistry
+from repro.serve.runtime.scheduler import (
+    DEFAULT_MAX_WAIT_US,
+    BatcherClosed,
+    MicroBatcher,
+)
+from repro.serve.runtime.telemetry import ModelTelemetry
+
+
+class Runtime:
+    def __init__(
+        self,
+        registry: ArtifactRegistry | None = None,
+        *,
+        max_wait_us: float = DEFAULT_MAX_WAIT_US,
+        flush_rows: int | None = None,
+        memory_budget_bytes: int | None = None,
+        warmup_on_load: bool = True,
+        engine_opts: dict | None = None,
+    ):
+        if registry is None:
+            registry = ArtifactRegistry(
+                memory_budget_bytes=memory_budget_bytes,
+                warmup_on_load=warmup_on_load,
+                engine_opts=engine_opts,
+            )
+        self.registry = registry
+        self.max_wait_us = max_wait_us
+        self.flush_rows = flush_rows
+        self._batchers: dict[str, MicroBatcher] = {}
+        self._telemetry: dict[str, ModelTelemetry] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+        # an idle batcher pins its engine; retire it on eviction so the
+        # registry's memory budget actually frees the engine's arrays
+        self.registry.add_evict_listener(self._on_evict)
+
+    # ------------------------------------------------------------ publishing
+
+    def publish(self, alias: str, artifact: CompiledArtifact, *, exact=None) -> str:
+        """Register ``artifact`` and atomically point ``alias`` at it."""
+        return self.registry.publish(alias, artifact, exact=exact)
+
+    def register(self, artifact: CompiledArtifact, **kw) -> str:
+        return self.registry.register(artifact, **kw)
+
+    def load_directory(self, dirpath: str, **kw) -> dict[str, str]:
+        return self.registry.add_directory(dirpath, **kw)
+
+    def set_alias(self, alias: str, ref: str) -> str:
+        return self.registry.set_alias(alias, ref)
+
+    # --------------------------------------------------------------- serving
+
+    def _batcher(self, digest: str, engine) -> MicroBatcher:
+        b = self._batchers.get(digest)
+        if b is not None and b.engine is engine:
+            return b
+        stale = None
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("Runtime is closed")
+            b = self._batchers.get(digest)
+            if b is None or b.engine is not engine:
+                # first use, or the registry evicted + rebuilt this model's
+                # engine: retire the old batcher (it drains in-flight work
+                # on the old engine) and route new traffic to the fresh one.
+                stale = b
+                tel = self._telemetry.setdefault(digest, ModelTelemetry())
+                b = MicroBatcher(
+                    engine,
+                    max_wait_us=self.max_wait_us,
+                    flush_rows=self.flush_rows,
+                    telemetry=tel,
+                    name=digest[:12],
+                )
+                self._batchers[digest] = b
+        if stale is not None:
+            stale.close()
+        return b
+
+    def _on_evict(self, digest: str) -> None:
+        """Registry evicted ``digest``'s engine: retire its batcher (the
+        close drains in-flight work on the old engine first)."""
+        with self._lock:
+            b = self._batchers.pop(digest, None)
+        if b is not None:
+            b.close()
+
+    def submit(self, model: str, Z):
+        """Async scoring: ``Future[SliceResult]`` for ``Z`` on ``model``."""
+        while True:
+            digest, engine = self.registry.get_engine(model)
+            try:
+                return self._batcher(digest, engine).submit(Z)
+            except BatcherClosed:
+                # the batcher was retired between lookup and submit (engine
+                # evicted + reloaded under us); re-resolve onto the fresh one
+                continue
+
+    def predict(self, model: str, Z) -> tuple[np.ndarray, np.ndarray]:
+        """Synchronous convenience: (values, valid) like ``SVMEngine.predict``."""
+        res = self.submit(model, Z).result()
+        return res.values, res.valid
+
+    def warmup(self, model: str) -> int:
+        """Force-load + warm ``model`` now; returns its compiled variants."""
+        _, engine = self.registry.get_engine(model)
+        if not self.registry.warmup_on_load:
+            engine.warmup()                 # registry didn't warm at load time
+        return engine.jit_cache_size()
+
+    # ------------------------------------------------------------- telemetry
+
+    def stats(self, model: str | None = None) -> dict:
+        """Telemetry snapshot: one model's, or the whole runtime tree."""
+        if model is not None:
+            digest = self.registry.resolve(model)
+            tel = self._telemetry.get(digest)
+            batcher = self._batchers.get(digest)
+            if batcher is not None:
+                engine = batcher.engine          # the engine traffic actually hits
+            else:
+                entry = self.registry._entries.get(digest)
+                engine = entry.engine if entry is not None else None
+            if tel is None:
+                tel = ModelTelemetry()            # zeroed snapshot pre-traffic
+            out = tel.snapshot(engine)
+            out["digest"] = digest
+            entry = self.registry._entries.get(digest)
+            if entry is not None:
+                out["evictions"] = entry.evictions
+            return out
+        with self._lock:
+            digests = list(self._telemetry)
+        return {
+            "registry": self.registry.snapshot(),
+            "models": {d[:12]: self.stats(d) for d in digests},
+        }
+
+    # -------------------------------------------------------------- lifetime
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            batchers = list(self._batchers.values())
+            self._batchers.clear()
+        for b in batchers:
+            b.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

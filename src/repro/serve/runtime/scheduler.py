@@ -1,0 +1,231 @@
+"""``MicroBatcher`` — async request coalescing in front of one ``SVMEngine``.
+
+The engine's fast path is a fixed-shape fused step over a power-of-two
+shape bucket; a single-row request therefore pays for a whole
+``min_bucket``-row step. Under concurrent traffic that cost is shared:
+the batcher queues small requests per model and flushes them as ONE
+engine submit — the rows land in the same padded bucket one request
+would have paid for alone, so N coalesced requests cost ~1/N each.
+
+Scheduling is queue + deadline, the classic micro-batching rule:
+
+  * **bucket fills** — pending rows reach ``flush_rows`` (a bucket
+    boundary of the engine, default ``min_bucket``): flush immediately,
+    the step's padding waste is zero at that point;
+  * **deadline expires** — the OLDEST queued request has waited
+    ``max_wait_us``: flush whatever is pending. A lone request on an
+    idle model therefore sees at most ``max_wait_us`` of added latency,
+    and heavy traffic never waits at all (the bucket fills first).
+
+Everything the engine guarantees survives coalescing:
+
+  * **zero steady-state recompiles** — the concatenated rows go through
+    ``engine.submit``'s existing bucket padding, so the flush hits the
+    same bounded set of compiled variants (asserted in the throughput
+    benchmark via ``jit_cache_size`` before/after);
+  * **deferred sync** — the flush thread never blocks on device compute:
+    futures resolve with ``SliceResult`` views of the shared
+    ``EngineResult`` the moment the submit returns, and the one
+    device→host sync happens when the FIRST client materializes (the
+    engine's materialize lock makes that race safe);
+  * **per-request row order** — ``EngineResult.split`` carves the
+    coalesced result at the original request boundaries, so each caller
+    sees its rows in the order it sent them, including rows the engine
+    patched through the exact fallback path.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.serve.runtime.telemetry import ModelTelemetry
+
+DEFAULT_MAX_WAIT_US = 200.0
+
+
+class BatcherClosed(RuntimeError):
+    """Raised by ``submit`` on a closed batcher (e.g. retired after an
+    engine reload); ``Runtime`` re-resolves and retries on a fresh one."""
+
+
+class _EmptyResult:
+    """Zero-row result with the engine's output shapes; no device step."""
+
+    def __init__(self, engine):
+        k = engine.num_heads
+        self.values = (np.zeros((0, k), np.float32) if engine.multiclass
+                       else np.zeros((0,), np.float32))
+        self.valid = np.zeros((0,), bool)
+        self.labels = np.zeros((0,), np.int32)
+
+    def __len__(self) -> int:
+        return 0
+
+    def block_until_ready(self):
+        return self
+
+
+class _Pending:
+    __slots__ = ("Z", "future", "t_enqueue")
+
+    def __init__(self, Z: np.ndarray, future: Future, t_enqueue: float):
+        self.Z = Z
+        self.future = future
+        self.t_enqueue = t_enqueue
+
+
+class MicroBatcher:
+    """Coalesce concurrent ``submit`` calls into bucket-sized engine steps.
+
+    ``submit(Z) -> Future[SliceResult]``: the future resolves as soon as
+    the coalesced engine step is ENQUEUED on the device (deferred sync);
+    materializing the result's ``.values`` / ``.labels`` / ``.valid``
+    performs the one host transfer, shared with every sibling request.
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        max_wait_us: float = DEFAULT_MAX_WAIT_US,
+        flush_rows: int | None = None,
+        telemetry: ModelTelemetry | None = None,
+        name: str = "model",
+    ):
+        if flush_rows is None:
+            flush_rows = engine.min_bucket
+        if flush_rows < 1 or flush_rows > engine.max_batch:
+            raise ValueError(
+                f"flush_rows must be in [1, {engine.max_batch}], got {flush_rows}"
+            )
+        self.engine = engine
+        self.max_wait_s = max_wait_us * 1e-6
+        self.flush_rows = flush_rows
+        self.telemetry = telemetry if telemetry is not None else ModelTelemetry()
+        self.name = name
+        self._queue: collections.deque[_Pending] = collections.deque()
+        self._queued_rows = 0
+        self._cond = threading.Condition()
+        self._closed = False
+        self._worker = threading.Thread(
+            target=self._run, name=f"microbatch-{name}", daemon=True
+        )
+        self._worker.start()
+
+    # ---------------------------------------------------------------- client
+
+    def submit(self, Z) -> Future:
+        """Enqueue one request; returns a future of its ``SliceResult``."""
+        Z = np.asarray(Z, dtype=np.float32)
+        if Z.ndim == 1:
+            Z = Z[None, :]
+        if Z.ndim != 2 or Z.shape[1] != self.engine.d:
+            raise ValueError(
+                f"expected (n, {self.engine.d}) batch, got {Z.shape}"
+            )
+        fut: Future = Future()
+        if Z.shape[0] == 0:                       # nothing to coalesce
+            with self._cond:
+                if self._closed:
+                    raise BatcherClosed(f"MicroBatcher({self.name!r}) is closed")
+            fut.set_result(_EmptyResult(self.engine))
+            return fut
+        item = _Pending(Z, fut, time.perf_counter())
+        with self._cond:
+            if self._closed:
+                raise BatcherClosed(f"MicroBatcher({self.name!r}) is closed")
+            self._queue.append(item)
+            self._queued_rows += Z.shape[0]
+            self.telemetry.record_enqueue(Z.shape[0])
+            self._cond.notify()
+        return fut
+
+    def flush(self) -> None:
+        """Drain the queue synchronously (tests, shutdown)."""
+        with self._cond:
+            batch = self._drain_locked()
+        if batch:
+            self._execute(batch, deadline=False)
+
+    def close(self) -> None:
+        """Stop the flush thread; pending requests are flushed first."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        self._worker.join(timeout=5.0)
+        self.flush()                               # anything enqueued at the wire
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ---------------------------------------------------------------- worker
+
+    def _drain_locked(self) -> list[_Pending]:
+        batch = list(self._queue)
+        self._queue.clear()
+        self._queued_rows = 0
+        return batch
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._closed:
+                    self._cond.wait()
+                if self._closed:
+                    batch = self._drain_locked()
+                    deadline_hit = False
+                elif self._queued_rows >= self.flush_rows:
+                    batch, deadline_hit = self._drain_locked(), False
+                else:
+                    oldest = self._queue[0].t_enqueue
+                    remaining = oldest + self.max_wait_s - time.perf_counter()
+                    if remaining > 0:
+                        self._cond.wait(timeout=remaining)
+                        continue                   # re-evaluate both conditions
+                    batch, deadline_hit = self._drain_locked(), True
+            if batch:
+                self._execute(batch, deadline=deadline_hit)
+            if self._closed and not batch:
+                return
+
+    def _execute(self, batch: list[_Pending], *, deadline: bool) -> None:
+        sizes = [p.Z.shape[0] for p in batch]
+        rows = int(sum(sizes))
+        try:
+            Z = np.concatenate([p.Z for p in batch], axis=0)
+            result = self.engine.submit(Z)
+            # e2e latency closes when the SHARED result first materializes
+            # (one sample per coalesced request, recorded by whichever
+            # client thread syncs first).
+            enqueued = [p.t_enqueue for p in batch]
+            telemetry = self.telemetry
+
+            def _on_materialize(ts=enqueued, tel=telemetry):
+                done = time.perf_counter()
+                for t0 in ts:
+                    tel.record_latency(done - t0)
+
+            result.on_materialize = _on_materialize
+            slices = result.split(sizes)
+        except BaseException as e:                 # scatter the failure too
+            self.telemetry.record_flush(len(batch), rows, deadline=deadline)
+            for p in batch:
+                if p.future.set_running_or_notify_cancel():
+                    p.future.set_exception(e)
+            return
+        self.telemetry.record_flush(len(batch), rows, deadline=deadline)
+        for p, s in zip(batch, slices):
+            # a client may have cancelled while queued; a cancelled future
+            # must not take the whole flush worker down with it
+            if p.future.set_running_or_notify_cancel():
+                p.future.set_result(s)

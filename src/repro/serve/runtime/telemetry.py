@@ -1,0 +1,114 @@
+"""Per-model serving telemetry for the multi-tenant runtime.
+
+One ``ModelTelemetry`` per served digest, fed by the micro-batcher
+(enqueue / flush / materialize events) and merged with the engine's own
+``EngineStats.snapshot()`` when exported. Everything is lock-guarded —
+the writers are N client threads plus the flush thread.
+
+The exported snapshot answers the operational questions the ROADMAP's
+"millions of users" target implies:
+
+  * **p50 / p99 latency** — end-to-end per request: enqueue into the
+    scheduler queue → the coalesced result's host materialization. A
+    bounded ring buffer (default 4096 samples) keeps the percentile
+    memory constant under unbounded traffic.
+  * **queue depth** — current and high-water pending rows, the signal
+    that a model needs a bigger flush target (or more capacity).
+  * **coalescing factor** — requests per engine step; 1.0 means the
+    scheduler is adding latency without amortizing anything, ≫1 is the
+    micro-batching win.
+  * **fallback rate / compile count** — straight from the engine's
+    thread-safe stats (accuracy-contract violations, trace activity).
+  * **evictions / loads** — registry-level counters (cold-model churn).
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+
+import numpy as np
+
+DEFAULT_WINDOW = 4096
+
+
+class LatencyWindow:
+    """Bounded sample window with percentile export (thread-safe)."""
+
+    def __init__(self, maxlen: int = DEFAULT_WINDOW):
+        self._samples = collections.deque(maxlen=maxlen)
+        self._count = 0
+        self._lock = threading.Lock()
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self._samples.append(float(seconds))
+            self._count += 1
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            samples = np.asarray(self._samples, np.float64)
+            total = self._count
+        if samples.size == 0:
+            return {"n": 0, "p50_ms": None, "p99_ms": None}
+        return {
+            "n": total,                       # recorded ever; window may be smaller
+            "p50_ms": round(float(np.percentile(samples, 50)) * 1e3, 4),
+            "p99_ms": round(float(np.percentile(samples, 99)) * 1e3, 4),
+        }
+
+
+class ModelTelemetry:
+    """Counters + latency window for one served model (one digest)."""
+
+    def __init__(self, window: int = DEFAULT_WINDOW):
+        self.latency = LatencyWindow(window)
+        self._lock = threading.Lock()
+        self._requests = 0
+        self._rows = 0
+        self._flushes = 0
+        self._deadline_flushes = 0        # flushed because max_wait_us expired
+        self._queue_rows = 0              # rows currently pending
+        self._max_queue_rows = 0
+
+    # ------------------------------------------------------------- recording
+
+    def record_enqueue(self, rows: int) -> None:
+        with self._lock:
+            self._requests += 1
+            self._rows += rows
+            self._queue_rows += rows
+            self._max_queue_rows = max(self._max_queue_rows, self._queue_rows)
+
+    def record_flush(self, requests: int, rows: int, *, deadline: bool) -> None:
+        with self._lock:
+            self._flushes += 1
+            self._deadline_flushes += int(deadline)
+            self._queue_rows -= rows
+
+    def record_latency(self, seconds: float) -> None:
+        self.latency.record(seconds)
+
+    # -------------------------------------------------------------- exporting
+
+    def snapshot(self, engine=None) -> dict:
+        with self._lock:
+            out = {
+                "requests": self._requests,
+                "rows": self._rows,
+                "flushes": self._flushes,
+                "deadline_flushes": self._deadline_flushes,
+                "queue_rows": self._queue_rows,
+                "max_queue_rows": self._max_queue_rows,
+                "coalescing_factor": round(
+                    self._requests / max(1, self._flushes), 3
+                ),
+                "rows_per_flush": round(self._rows / max(1, self._flushes), 2),
+            }
+        out["latency"] = self.latency.snapshot()
+        if engine is not None:
+            eng = engine.stats.snapshot()
+            out["engine"] = eng
+            out["fallback_rate"] = eng["fallback_rate"]
+            out["compiled_steps"] = eng["compiled_steps"]
+        return out

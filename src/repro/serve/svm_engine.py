@@ -64,6 +64,7 @@ bucket histogram, compile count).
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -91,11 +92,55 @@ def bucket_size(n: int, min_bucket: int = 32, max_batch: int = 8192) -> int:
 
 @dataclasses.dataclass
 class EngineStats:
+    """Serving counters, safe under concurrent ``submit()`` callers.
+
+    The micro-batching runtime drives one engine from many threads, so
+    every mutation goes through a lock — bare ``x += 1`` on the dataclass
+    fields loses updates under contention (CPython interleaves the
+    LOAD/STORE pair). Reads of individual counters stay lock-free (single
+    attribute loads are atomic); ``snapshot()`` gives a consistent view.
+    """
+
     batches: int = 0
     instances: int = 0
     fallback_instances: int = 0
+    compiled_steps: int = 0             # bucket variants traced (compile count)
     padded_instances: int = 0           # wasted rows from bucket padding
     bucket_hits: dict = dataclasses.field(default_factory=dict)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
+
+    def record_batch(self, n: int, buckets: list[tuple[int, int]]) -> None:
+        """One submit(): n rows chunked into [(bucket, rows_used), ...]."""
+        with self._lock:
+            self.batches += 1
+            self.instances += n
+            for bkt, m in buckets:
+                self.padded_instances += bkt - m
+                self.bucket_hits[bkt] = self.bucket_hits.get(bkt, 0) + 1
+
+    def record_fallback(self, k: int) -> None:
+        with self._lock:
+            self.fallback_instances += k
+
+    def record_compile(self) -> None:
+        with self._lock:
+            self.compiled_steps += 1
+
+    def snapshot(self) -> dict:
+        """Consistent point-in-time copy of every counter (plain dict)."""
+        with self._lock:
+            return {
+                "batches": self.batches,
+                "instances": self.instances,
+                "fallback_instances": self.fallback_instances,
+                "fallback_rate": self.fallback_instances / max(1, self.instances),
+                "compiled_steps": self.compiled_steps,
+                "padded_instances": self.padded_instances,
+                "padding_overhead": self.padded_instances / max(1, self.instances),
+                "bucket_hits": dict(self.bucket_hits),
+            }
 
     @property
     def fallback_rate(self) -> float:
@@ -119,6 +164,8 @@ class EngineResult:
                                          # None when no fallback can happen
         self._chunks = chunks            # [(scores, valid, labels), n_rows]
         self._done = None
+        self._sync = threading.Lock()    # scatter consumers race to be first
+        self.on_materialize = None       # scheduler latency hook (fires once)
 
     def block_until_ready(self) -> "EngineResult":
         for out, _ in self._chunks:
@@ -126,9 +173,33 @@ class EngineResult:
         return self
 
     def _materialize(self):
-        if self._done is None:
-            self._done = self._engine._finalize(self._Z, self._chunks)
+        # The micro-batcher hands slices of one result to many client
+        # threads; the first accessor runs _finalize exactly once (it
+        # mutates fallback counters — double-running would double-count).
+        with self._sync:
+            if self._done is None:
+                self._done = self._engine._finalize(self._Z, self._chunks)
+                if self.on_materialize is not None:
+                    self.on_materialize()
         return self._done
+
+    def split(self, sizes) -> list["SliceResult"]:
+        """Scatter hook: carve this result into per-request row spans.
+
+        ``sizes`` are the row counts of the requests that were coalesced
+        (in submission order, summing to this result's n). Each returned
+        ``SliceResult`` is a zero-copy deferred view — the parent still
+        materializes ONCE on first access from any slice, so coalescing
+        keeps the engine's deferred-sync property end to end.
+        """
+        spans, start = [], 0
+        for sz in sizes:
+            spans.append(SliceResult(self, start, start + sz))
+            start += sz
+        total = sum(m for _, m in self._chunks)
+        if start != total:
+            raise ValueError(f"split sizes sum to {start}, result has {total} rows")
+        return spans
 
     @property
     def values(self) -> np.ndarray:
@@ -144,6 +215,43 @@ class EngineResult:
     def labels(self) -> np.ndarray:
         """(n,) labels: {-1, +1} (binary) or argmax class index (OvR)."""
         return self._materialize()[2]
+
+
+class SliceResult:
+    """One request's rows out of a coalesced ``EngineResult``.
+
+    Same accessor surface as ``EngineResult`` (``values`` / ``valid`` /
+    ``labels`` / ``block_until_ready``); materializing any slice
+    materializes the shared parent once and every sibling becomes free.
+    """
+
+    def __init__(self, parent: EngineResult, start: int, stop: int):
+        self._parent = parent
+        self._start = start
+        self._stop = stop
+
+    def __len__(self) -> int:
+        return self._stop - self._start
+
+    def block_until_ready(self) -> "SliceResult":
+        self._parent.block_until_ready()
+        return self
+
+    def _view(self, i):
+        full = self._parent._materialize()[i]
+        return full[self._start : self._stop]
+
+    @property
+    def values(self) -> np.ndarray:
+        return self._view(0)
+
+    @property
+    def valid(self) -> np.ndarray:
+        return self._view(1)
+
+    @property
+    def labels(self) -> np.ndarray:
+        return self._view(2)
 
 
 class SVMEngine:
@@ -183,6 +291,7 @@ class SVMEngine:
         self.tile_config = tile_config
         self.bucket_configs: dict[int, TileConfig] = {}
         self.stats = EngineStats()
+        self._trace_lock = threading.Lock()   # guards bucket_configs
 
         # The artifact's arrays are closed over -> baked into the executable
         # as constants; only the padded batch is an argument (and is donated
@@ -217,17 +326,19 @@ class SVMEngine:
         block sweep) or the kernel default. block_n is clamped to the
         bucket so tiny buckets never pad up to a full default tile.
         """
-        cached = self.bucket_configs.get(bucket)
-        if cached is not None:
-            return cached
-        if self.tile_config is not None:
-            base = self.tile_config
-        else:
-            kernel, key = self._family.tile_lookup(self.artifact, bucket)
-            base = tuning.lookup(kernel, key)
-        cfg = base.clamp_block_n(bucket)
-        self.bucket_configs[bucket] = cfg
-        return cfg
+        with self._trace_lock:
+            cached = self.bucket_configs.get(bucket)
+            if cached is not None:
+                return cached
+            if self.tile_config is not None:
+                base = self.tile_config
+            else:
+                kernel, key = self._family.tile_lookup(self.artifact, bucket)
+                base = tuning.lookup(kernel, key)
+            cfg = base.clamp_block_n(bucket)
+            self.bucket_configs[bucket] = cfg
+            self.stats.record_compile()       # runs at trace time only
+            return cfg
 
     # ------------------------------------------------------------- fast path
 
@@ -246,10 +357,7 @@ class SVMEngine:
             buf[:m] = rows                                  # host-side pad
             out = self._step(jnp.asarray(buf))
             chunks.append((out, m))
-            self.stats.padded_instances += bkt - m
-            self.stats.bucket_hits[bkt] = self.stats.bucket_hits.get(bkt, 0) + 1
-        self.stats.batches += 1
-        self.stats.instances += n
+        self.stats.record_batch(n, [(c[0][0].shape[0], c[1]) for c in chunks])
         # Z is only needed to re-score bound-violating rows; don't pin the
         # host copy of every deferred batch when no fallback can happen.
         return EngineResult(self, Z if self.allow_fallback else None, chunks)
@@ -290,6 +398,7 @@ class SVMEngine:
                 self.submit(np.zeros((n, self.d), np.float32)).block_until_ready()
         finally:
             saved.bucket_hits = self.stats.bucket_hits
+            saved.compiled_steps += self.stats.compiled_steps  # traces are real
             self.stats = saved
         return self.jit_cache_size()
 
@@ -362,7 +471,7 @@ class SVMEngine:
 
         if self.allow_fallback and not valid.all():
             idx = np.nonzero(~valid)[0]
-            self.stats.fallback_instances += len(idx)
+            self.stats.record_fallback(len(idx))
             exact_scores = np.asarray(self._slow(jnp.asarray(Z[idx])))  # (m, K)
             scores[idx] = exact_scores
             if self.multiclass:

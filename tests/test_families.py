@@ -101,6 +101,67 @@ def test_artifact_bytes_identical_across_processes(tmp_path):
         assert a.read() == b.read()
 
 
+def test_artifact_digest_matches_bytes_and_file(tmp_path):
+    """digest() is sha256(to_bytes()), and save writes exactly those bytes,
+    so hashing the FILE reproduces the digest (registry lazy indexing)."""
+    import hashlib
+
+    art = maclaurin.compile(_svm(7))
+    raw = art.to_bytes()
+    assert art.digest() == hashlib.sha256(raw).hexdigest()
+    path = str(tmp_path / "a.npz")
+    art.save(path)
+    with open(path, "rb") as f:
+        assert f.read() == raw
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_artifact_digest_save_load_save_roundtrip(family, tmp_path):
+    """save -> load -> save lands on the SAME digest (content-addressed
+    stores can dedupe identical compiles no matter who re-serialized)."""
+    art = get_family(family).compile(_svm(9, d=6, n_sv=24), num_features=64)
+    path = str(tmp_path / "a.npz")
+    art.save(path)
+    back = CompiledArtifact.load(path)
+    assert back.digest() == art.digest()
+    path2 = str(tmp_path / "b.npz")
+    back.save(path2)
+    with open(path, "rb") as f1, open(path2, "rb") as f2:
+        assert f1.read() == f2.read()
+
+
+def test_artifact_digest_roundtrip_across_processes(tmp_path):
+    """A FRESH interpreter loading the saved file and re-saving it computes
+    the identical digest — the registry key is process-independent."""
+    import os
+
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "src")
+    path = str(tmp_path / "art.npz")
+    resaved = str(tmp_path / "resaved.npz")
+    art = fourier.compile(_svm(11, d=6, n_sv=24), num_features=64, seed=4)
+    art.save(path)
+    prog = (
+        f"import sys; sys.path.insert(0, {src!r})\n"
+        "from repro.core.families import CompiledArtifact\n"
+        f"a = CompiledArtifact.load({path!r})\n"
+        f"a.save({resaved!r})\n"
+        "print(a.digest())\n"
+    )
+    proc = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                          text=True)
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.strip() == art.digest()
+    assert CompiledArtifact.load(resaved).digest() == art.digest()
+
+
+def test_artifact_digest_distinguishes_content():
+    a = maclaurin.compile(_svm(1))
+    b = maclaurin.compile(_svm(2))
+    assert a.digest() != b.digest()
+    assert a.with_meta(note="x").digest() != a.digest()   # meta is content too
+
+
 def test_artifact_rejects_future_format_version(tmp_path):
     import io
 
