@@ -5,10 +5,11 @@ The three stages are deliberately separable:
 1. TRAIN an exact RBF model (training side, heavyweight).
 2. COMPILE it with ``compile_model(svm, budget)`` — the paper's §4
    verification run across every approximation family (maclaurin
-   quadratic form, §3.2 poly-2 expansion, random Fourier features):
-   each candidate is measured for error vs the exact expansion and
-   serving latency on this host, and the cheapest artifact within the
-   accuracy budget wins. The artifact is saved to an ``.npz`` file.
+   quadratic form, §3.2 poly-2 expansion, random Fourier features) at
+   every storage dtype (f32 and int8-quantized): each candidate is
+   measured for error vs the exact expansion and serving latency on
+   this host, and the cheapest artifact within the accuracy budget
+   wins. The artifact is saved to an ``.npz`` file.
 3. SERVE the artifact file in an ``SVMEngine`` — the engine never sees a
    training-side object; a real deployment would run this stage in a
    different process (the load below goes through the same bytes).
@@ -33,6 +34,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import Budget, CompiledArtifact, compile_model, gamma_max
+from repro.core import families
 from repro.data.synthetic import make_blobs
 from repro.serve.svm_engine import SVMEngine
 from repro.svm import train_lssvm
@@ -55,14 +57,38 @@ def main():
     report = artifact.meta["compile_report"]
     print(f"compiled families (budget mean_abs <= {report['limit']:.3g}):")
     for row in report["families"]:
-        marker = "->" if row["family"] == report["chosen"] else "  "
-        print(f"  {marker} {row['family']:10s} err={row['mean_abs']:.4g} "
+        chosen = (row["family"] == report["chosen"]
+                  and row.get("dtype") == report["chosen_dtype"])
+        marker = "->" if chosen else "  "
+        tag = f"{row['family']}[{row.get('dtype', '?')}]"
+        if "skipped" in row:
+            print(f"  {marker} {tag:18s} skipped: {row['skipped']}")
+            continue
+        print(f"  {marker} {tag:18s} err={row['mean_abs']:.4g} "
               f"latency={row['latency_ms']:.3f}ms bytes={row['artifact_bytes']}"
               f"{'' if row['meets_budget'] else '  (over budget)'}")
 
     path = os.path.join(tempfile.gettempdir(), "svm_artifact.npz")
     artifact.save(path)
     print(f"artifact -> {path} ({os.path.getsize(path)} bytes on disk)\n")
+
+    # int8 variant of the same model: ~4x smaller serialized artifact, a
+    # distinct content digest (the registry can hold both), and its own
+    # measured quantization error in the meta.
+    # recompile a CLEAN f32 parent rather than reusing the winner: the
+    # winner's meta embeds the measured-latency compile_report, so its
+    # digest is not the stable registry identity of the f32 variant
+    fam = families.get_family(artifact.family)
+    f32_art = fam.compile(model)
+    q8_art = fam.compile(model, dtype="int8")
+    print(f"int8 variant of {artifact.family!r}: "
+          f"weight arrays {f32_art.nbytes()} -> {q8_art.nbytes()} bytes "
+          f"({f32_art.nbytes() / q8_art.nbytes():.2f}x smaller; this demo "
+          f"model is tiny, so the ~2 KB npz header hides most of it on "
+          f"disk — see the model_size benchmark for real footprints), "
+          f"quant err mean={q8_art.meta['quant_mean_abs_err']:.2e} "
+          f"max={q8_art.meta['quant_max_abs_err']:.2e}, "
+          f"digest {f32_art.digest()[:12]} vs {q8_art.digest()[:12]}\n")
 
     # 3. serve: reload from bytes (no training objects needed) and stream
     served = CompiledArtifact.load(path)

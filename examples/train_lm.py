@@ -12,7 +12,6 @@ The full 135M config trains with exactly the same code path on TPU
 """
 
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

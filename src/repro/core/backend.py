@@ -49,10 +49,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import TileConfig, tuning
-from repro.kernels.quadform.kernel import quadform_heads_pallas
+from repro.kernels.quadform.kernel import (
+    quadform_heads_pallas,
+    quadform_heads_q8_pallas,
+)
 from repro.kernels.quadform.ref import eq311_valid
 from repro.kernels.rbf_pred.kernel import rbf_predict_pallas
-from repro.kernels.rff_score.kernel import rff_score_pallas
+from repro.kernels.rff_score.kernel import rff_score_pallas, rff_score_q8_pallas
 
 Array = jax.Array
 
@@ -134,6 +137,54 @@ def quadform_heads(Z, M_all, V, c, b, gamma, msq, *, config: TileConfig | None =
     return quadform_heads_xla(Z, M_all, V, c, b, gamma, msq)
 
 
+def quadform_heads_q8_xla(Z, M_q, col_scale, V, c, b, gamma, msq):
+    """Int8-Hessian K-head quadratic form as one int8->f32 GEMM under XLA.
+
+    The stacked int8 operand is upcast INSIDE the contraction (XLA fuses
+    the convert into the GEMM loop on CPU — the weights stay int8 in
+    memory); the per-(head, column) scales fold onto the (n, K, d) GEMM
+    result with one broadcast multiply before the row-dot, exactly the
+    math the Pallas tile performs in VMEM.
+    """
+    n, d = Z.shape
+    k = M_q.shape[0]
+    z_sq = jnp.sum(Z * Z, axis=-1)                          # (n,)
+    m_kd = jnp.transpose(M_q, (1, 0, 2)).reshape(d, k * d)
+    zm = (Z @ m_kd.astype(jnp.float32)).reshape(n, k, d)    # ONE GEMM, all heads
+    zm = zm * col_scale[None, :, :]                         # fold dequant scales
+    quad = jnp.einsum("nkd,nd->nk", zm, Z)
+    lin = Z @ V.T                                           # (n, K)
+    env = jnp.exp(-z_sq[:, None] * gamma[None, :])
+    scores = env * (c[None, :] + lin + quad) + b[None, :]
+    return scores, z_sq, eq311_valid(z_sq, gamma, msq)
+
+
+def quadform_heads_q8(
+    Z, M_q, col_scale, V, c, b, gamma, msq, *, config: TileConfig | None = None
+):
+    """Dispatching fused K-head scores off an int8-quantized Hessian.
+
+    Z: (n, d); M_q: (K, d, d) int8; col_scale: (K, d) f32 per-column
+    dequant scales; V: (K, d) f32 (already dequantized — it is thin);
+    c/b/gamma/msq: (K,). Same return contract as ``quadform_heads``.
+    ``config=None`` resolves the ``quadform_q8`` tuning family for this
+    (d, K, n) bucket.
+    """
+    if config is None:
+        config = tuning.lookup(
+            "quadform_q8",
+            tuning.shape_key(
+                d=Z.shape[1], k=M_q.shape[0], n=tuning.bucket(Z.shape[0])
+            ),
+        )
+    if resolve() == "pallas":
+        return quadform_heads_q8_pallas(
+            Z, M_q, col_scale, V, c, b, gamma, msq,
+            config=config, interpret=_interpret(),
+        )
+    return quadform_heads_q8_xla(Z, M_q, col_scale, V, c, b, gamma, msq)
+
+
 # ------------------------------------------------------------ rff scoring
 
 
@@ -169,6 +220,42 @@ def rff_score(Z, W, phase, weights, bias, *, config: TileConfig | None = None):
             Z, W, phase, weights, bias, config=config, interpret=_interpret()
         )
     return rff_score_xla(Z, W, phase, weights, bias)
+
+
+def rff_score_q8_xla(Z, W_q, w_scale, phase, weights_q, wt_scale, bias):
+    """Int8-weights RFF scoring as two int8->f32 GEMMs under XLA; both
+    quantized axes are GEMM output axes, so each scale is one broadcast
+    multiply on the small result."""
+    proj = (Z @ W_q.astype(jnp.float32).T) * w_scale[None, :]
+    phi = jnp.cos(proj + phase[None, :])
+    return (phi @ weights_q.astype(jnp.float32).T) * wt_scale[None, :] \
+        + bias[None, :]
+
+
+def rff_score_q8(
+    Z, W_q, w_scale, phase, weights_q, wt_scale, bias,
+    *, config: TileConfig | None = None,
+):
+    """Dispatching fused RFF scores off int8 projection + readout weights.
+
+    Z: (n, d); W_q: (F, d) int8 with per-row scales w_scale (F,);
+    weights_q: (K, F) int8 with per-head scales wt_scale (K,); phase (F,)
+    and bias (K,) stay f32. Returns (n, K). ``config=None`` resolves the
+    ``rff_score_q8`` tuning family for this (d, F, n) bucket.
+    """
+    if config is None:
+        config = tuning.lookup(
+            "rff_score_q8",
+            tuning.shape_key(
+                d=Z.shape[1], f=W_q.shape[0], n=tuning.bucket(Z.shape[0])
+            ),
+        )
+    if resolve() == "pallas":
+        return rff_score_q8_pallas(
+            Z, W_q, w_scale, phase, weights_q, wt_scale, bias,
+            config=config, interpret=_interpret(),
+        )
+    return rff_score_q8_xla(Z, W_q, w_scale, phase, weights_q, wt_scale, bias)
 
 
 # ------------------------------------------------------------- family axis

@@ -23,11 +23,19 @@ a ``CompiledArtifact`` — pytree-registered, versioned npz ``save``/
 exports ``NAME``, ``compile(svm, **opts)``, ``score(artifact, Z,
 config=None)``, ``TILE_KERNEL`` and ``tile_lookup(artifact, bucket)``.
 
+Every family also compiles an int8 variant (``compile(...,
+dtype="int8")`` — see ``repro.core.families.quantize``): the bulk weight
+operand is stored int8 with per-group f32 scales, dequantization is
+fused into the serving GEMMs, and the measured quantization error ships
+in the artifact meta. Quantized variants serialize ~4x smaller, carry
+distinct content digests, and are first-class candidates in
+``compile_model``'s budget search.
+
 ``compile_model(svm, budget)`` is the front door: the §4 verification
 run across all families, returning the cheapest artifact within budget.
 """
 
-from repro.core.families import fourier, maclaurin, poly2
+from repro.core.families import fourier, maclaurin, poly2, quantize
 from repro.core.families.base import (
     ARTIFACT_FORMAT_VERSION,
     CompiledArtifact,
@@ -66,5 +74,6 @@ __all__ = [
     "get_family",
     "maclaurin",
     "poly2",
+    "quantize",
     "score_artifact",
 ]

@@ -42,7 +42,9 @@ Array = jax.Array
 
 # Bump when the on-disk layout changes incompatibly. Readers accept
 # anything <= their own version and reject newer files loudly.
-ARTIFACT_FORMAT_VERSION = 1
+# v2: quantized variants — int8 weight arrays with per-group f32 scales,
+#     ``dtype`` in the meta (absent in v1 files => "float32").
+ARTIFACT_FORMAT_VERSION = 2
 
 _HEADER_MEMBER = "__artifact__"
 
@@ -73,6 +75,11 @@ class CompiledArtifact:
     @property
     def multiclass(self) -> bool:
         return bool(self.meta["multiclass"])
+
+    @property
+    def dtype(self) -> str:
+        """Weight storage dtype: "float32" or "int8" (v1 files: float32)."""
+        return self.meta.get("dtype", "float32")
 
     def nbytes(self) -> int:
         """In-memory size of the servable arrays (Table-3 accounting)."""
@@ -173,13 +180,16 @@ def _unflatten(aux, children):
 jax.tree_util.register_pytree_node(CompiledArtifact, _flatten, _unflatten)
 
 
-def base_meta(*, d: int, num_heads: int, multiclass: bool, **extra) -> dict:
+def base_meta(
+    *, d: int, num_heads: int, multiclass: bool, dtype: str = "float32", **extra
+) -> dict:
     """The meta keys every family must provide, plus family extras."""
     return {
         "format_version": ARTIFACT_FORMAT_VERSION,
         "d": int(d),
         "num_heads": int(num_heads),
         "multiclass": bool(multiclass),
+        "dtype": str(dtype),
         **extra,
     }
 

@@ -58,24 +58,35 @@ def compile_model(
     sample=None,
     sample_n: int = 256,
     families: tuple[str, ...] | None = None,
+    dtypes: tuple[str, ...] = ("float32", "int8"),
     seed: int = 0,
     family_opts: dict | None = None,
     timing_repeats: int = 5,
 ) -> CompiledArtifact:
-    """Compile ``svm`` under every candidate family; return the fastest
-    artifact meeting ``budget`` on the verification sample.
+    """Compile ``svm`` under every candidate (family, dtype); return the
+    fastest artifact meeting ``budget`` on the verification sample.
 
-    ``sample=None`` synthesizes held-out points around the support
-    vectors (``fourier.holdout_sample`` — deterministic in ``seed``).
-    ``family_opts`` maps family name -> extra compile kwargs (e.g.
-    ``{"fourier": {"num_features": 4096, "structured": True}}``).
-    Raises ``ValueError`` listing every measured error when no family
+    Quantized variants are CANDIDATE POINTS in the same search: each
+    family is compiled at every entry of ``dtypes`` (int8 adds its
+    measured quantization error on top of the approximation error, and
+    the combined error vs the exact expansion is what the budget gates),
+    so a caller who can absorb the extra ~1e-3 error gets the ~4x smaller
+    artifact without asking. ``sample=None`` synthesizes held-out points
+    around the support vectors (``fourier.holdout_sample`` —
+    deterministic in ``seed``). ``family_opts`` maps family name -> extra
+    compile kwargs (e.g. ``{"fourier": {"num_features": 4096,
+    "structured": True}}``); combinations a family rejects (structured
+    fourier has no int8 form) are skipped and noted in the report.
+    Raises ``ValueError`` listing every measured error when no candidate
     fits the budget — the caller's recourse is a bigger fourier basis, a
     looser budget, or serving the exact model.
     """
     from repro.core import families as _families
+    from repro.core.families import quantize
 
     names = families or tuple(_families.FAMILIES)
+    for dt in dtypes:
+        quantize.check_dtype(dt)
     opts = family_opts or {}
 
     if sample is None:
@@ -91,39 +102,67 @@ def compile_model(
     candidates: list[tuple[float, CompiledArtifact]] = []
     for name in names:
         fam = _families.get_family(name)
-        # caller opts override the defaults (so family_opts={'fourier':
-        # {'seed': 7}} is legal); the shared sample doubles as fourier's
-        # held-out set so it is not regenerated and re-scored inside
-        # compile. Families that need neither absorb them via **_opts.
-        art = fam.compile(
-            svm, **{"seed": seed, "holdout": np.asarray(Z), **opts.get(name, {})}
-        )
-        scores, _ = fam.score(art, Z)
-        err = jnp.abs(scores - exact)
-        measured = {
-            "mean_abs": float(jnp.mean(err)),
-            "max_abs": float(jnp.max(err)),
-        }
-        step = jax.jit(lambda Zb, _f=fam, _a=art: _f.score(_a, Zb)[0])
-        latency_ms = 1e3 * autotune.measure(
-            lambda: step(Z), repeats=timing_repeats, warmup=2
-        )
-        ok = measured[budget.metric] <= limit
-        report.append({
-            "family": name,
-            **measured,
-            "latency_ms": round(latency_ms, 4),
-            "artifact_bytes": art.nbytes(),
-            "meets_budget": ok,
-        })
-        if ok:
-            candidates.append((latency_ms, art))
+        for dt in dtypes:
+            # caller opts override the defaults (so family_opts={'fourier':
+            # {'seed': 7}} is legal); the shared sample doubles as fourier's
+            # held-out set so it is not regenerated and re-scored inside
+            # compile. Families that need neither absorb them via **_opts.
+            try:
+                art = fam.compile(
+                    svm,
+                    **{
+                        "seed": seed,
+                        "holdout": np.asarray(Z),
+                        "dtype": dt,
+                        **opts.get(name, {}),
+                    },
+                )
+            except NotImplementedError as e:
+                report.append({
+                    "family": name, "dtype": dt, "skipped": str(e),
+                    "meets_budget": False,
+                })
+                continue
+            scores, _ = fam.score(art, Z)
+            err = jnp.abs(scores - exact)
+            measured = {
+                "mean_abs": float(jnp.mean(err)),
+                "max_abs": float(jnp.max(err)),
+            }
+            step = jax.jit(lambda Zb, _f=fam, _a=art: _f.score(_a, Zb)[0])
+            latency_ms = 1e3 * autotune.measure(
+                lambda: step(Z), repeats=timing_repeats, warmup=2
+            )
+            ok = measured[budget.metric] <= limit
+            row = {
+                "family": name,
+                "dtype": art.dtype,
+                **measured,
+                "latency_ms": round(latency_ms, 4),
+                # in-memory array bytes: constant-time, and the serialized
+                # npz tracks it within ~2 KB of header (measured per
+                # variant in the model_size benchmark) — serializing all
+                # six candidates just to report file sizes would copy
+                # tens of MB per compile for large models
+                "artifact_bytes": art.nbytes(),
+                "meets_budget": ok,
+            }
+            for key in ("quant_mean_abs_err", "quant_max_abs_err"):
+                if key in art.meta:
+                    row[key] = art.meta[key]
+            report.append(row)
+            if ok:
+                candidates.append((latency_ms, art))
 
     if not candidates:
         raise ValueError(
             f"no family meets {budget} (limit {limit:.4g}) on the "
             f"verification sample: "
-            + ", ".join(f"{r['family']}: {r[budget.metric]:.4g}" for r in report)
+            + ", ".join(
+                f"{r['family']}[{r.get('dtype', '?')}]: "
+                + (f"{r[budget.metric]:.4g}" if budget.metric in r else "skipped")
+                for r in report
+            )
         )
     latency_ms, winner = min(candidates, key=lambda t: t[0])
     return winner.with_meta(
@@ -134,5 +173,6 @@ def compile_model(
             "sample_n": int(Z.shape[0]),
             "families": report,
             "chosen": winner.family,
+            "chosen_dtype": winner.dtype,
         }
     )

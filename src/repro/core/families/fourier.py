@@ -36,12 +36,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backend
+from repro.core.families import quantize
 from repro.core.families.base import CompiledArtifact, base_meta, stack_heads
 from repro.core.rbf import SVMModel, rbf_kernel
 from repro.kernels.common import TileConfig, tuning
 
 NAME = "fourier"
 TILE_KERNEL = "rff_score"
+TILE_KERNEL_Q8 = "rff_score_q8"
 
 DEFAULT_NUM_FEATURES = 1024
 DEFAULT_HOLDOUT_N = 256
@@ -55,6 +57,7 @@ def compile(                                                   # noqa: A001
     *,
     num_features: int = DEFAULT_NUM_FEATURES,
     structured: bool = False,
+    dtype: str = "float32",
     seed: int = 0,
     err_tolerance: float | None = None,
     holdout=None,
@@ -65,8 +68,20 @@ def compile(                                                   # noqa: A001
     the held-out error, and pack the servable arrays.
 
     ``structured=True`` rounds ``num_features`` up to a whole number of
-    Fastfood stacks (each 2^ceil(log2 d) wide).
+    Fastfood stacks (each 2^ceil(log2 d) wide). ``dtype="int8"``
+    quantizes the dense projection matrix (per-feature-row scales) and
+    the per-head readout weights (per-head scales); the held-out error
+    below is then measured on the QUANTIZED artifact, so the meta's
+    accuracy contract describes what actually ships. Fastfood's weights
+    are diagonal operators with O(F) footprint — nothing worth
+    quantizing — so ``structured=True`` with int8 is rejected.
     """
+    quantize.check_dtype(dtype)
+    if structured and dtype == quantize.INT8_DTYPE:
+        raise NotImplementedError(
+            "int8 fourier artifacts require the dense projection; the "
+            "Fastfood operators are O(F) diagonals with no footprint to win"
+        )
     X = np.asarray(svm.X, np.float32)
     gamma = float(svm.gamma)
     ay2, b, k, multiclass = stack_heads(svm)
@@ -105,10 +120,15 @@ def compile(                                                   # noqa: A001
         ),
     )
 
-    # §4-style pre-serving verification: measure the estimator on held-out
-    # points and ship the verdict with the artifact.
     Zh = holdout if holdout is not None else holdout_sample(svm, seed, holdout_n)
     Zh = jnp.asarray(np.asarray(Zh, np.float32))
+    if dtype == quantize.INT8_DTYPE:
+        art = quantize_rff_artifact(art, holdout=Zh)
+
+    # §4-style pre-serving verification: measure the estimator on held-out
+    # points and ship the verdict with the artifact. For int8 the verdict
+    # is measured on the QUANTIZED artifact — the accuracy contract must
+    # describe the arrays being served, not their f32 parent.
     exact = rbf_kernel(Zh, jnp.asarray(X), svm.gamma) @ ay2.T + b[None, :]
     approx, _ = score(art, Zh)
     err = jnp.abs(approx - exact)
@@ -121,6 +141,41 @@ def compile(                                                   # noqa: A001
         err_tolerance=err_tolerance,
         valid_globally=bool(err_tolerance is None or mean_err <= err_tolerance),
     )
+
+
+def quantize_rff_artifact(
+    art: CompiledArtifact, *, holdout=None
+) -> CompiledArtifact:
+    """Int8 variant of a dense-projection RFF artifact.
+
+    W — the O(F d) bulk — goes int8 with one scale per feature row (each
+    row's scale folds onto its projection column post-GEMM); the per-head
+    readout weights go int8 with per-head scales (the feature axis is the
+    readout's CONTRACTION axis, so any finer grouping could not fold);
+    phase and bias stay f32. Measured quantization error vs the f32
+    parent rides in the meta when ``holdout`` is given.
+    """
+    if art.meta.get("projection") != "dense":
+        raise NotImplementedError(
+            "only dense-projection RFF artifacts have int8 variants"
+        )
+    a = art.arrays
+    w_q, w_scale = quantize.quantize_rows(a["W"])            # (F,d), (F,)
+    wt_q, wt_scale = quantize.quantize_rows(a["weights"])    # (K,F), (K,)
+    q_art = CompiledArtifact(
+        family=art.family,
+        arrays={
+            "W": w_q, "W_scale": w_scale,
+            "weights": wt_q, "weights_scale": wt_scale,
+            "phase": a["phase"], "b": a["b"],
+        },
+        meta={**art.meta, "dtype": quantize.INT8_DTYPE},
+    )
+    if holdout is not None:
+        q_art = q_art.with_meta(
+            **quantize.measure_quant_error(art, q_art, holdout)
+        )
+    return q_art
 
 
 def holdout_sample(svm: SVMModel, seed: int, n: int = DEFAULT_HOLDOUT_N):
@@ -221,6 +276,11 @@ def score(
         )
         phi = jnp.cos(proj + a["phase"][None, :])
         scores = phi @ a["weights"].T + a["b"][None, :]
+    elif artifact.dtype == quantize.INT8_DTYPE:
+        scores = backend.rff_score_q8(
+            Z, a["W"], a["W_scale"], a["phase"],
+            a["weights"], a["weights_scale"], a["b"], config=config,
+        )
     else:
         scores = backend.rff_score(
             Z, a["W"], a["phase"], a["weights"], a["b"], config=config
@@ -232,6 +292,9 @@ def score(
 
 
 def tile_lookup(artifact: CompiledArtifact, bucket: int) -> tuple[str, str]:
-    return TILE_KERNEL, tuning.shape_key(
+    kernel = (
+        TILE_KERNEL_Q8 if artifact.dtype == quantize.INT8_DTYPE else TILE_KERNEL
+    )
+    return kernel, tuning.shape_key(
         d=artifact.d, f=int(artifact.meta["num_features"]), n=bucket
     )

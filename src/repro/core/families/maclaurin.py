@@ -8,10 +8,17 @@ independent of n_sv; validity is the per-row Eq 3.11 envelope with the
 paper's 3.05% per-term relative-error guarantee
 (``bounds.REL_ERR_AT_HALF``).
 
-Artifact layout (all f32):
+Artifact layout:
 
-    M (K, d, d)  stacked Hessians        c, b, gamma, msq (K,) scalars
-    v (K, d)     gradient terms
+    f32:  M (K, d, d) stacked Hessians     c, b, gamma, msq (K,) scalars
+          v (K, d)    gradient terms
+
+    int8 (``compile(..., dtype="int8")``): M stored int8 with per-(head,
+          16-column-group) f32 scales ``M_scale`` (K, G); v stored int8
+          with per-head scales ``v_scale`` (K,); scalars stay f32. The
+          measured quantization error vs the f32 parent ships in the meta
+          (``quant_mean_abs_err`` / ``quant_max_abs_err``) and the scales
+          fold into the serving GEMMs (``backend.quadform_heads_q8``).
 
 ``from_approx`` wraps an already-built ``ApproxModel`` (the pre-families
 API) into the same artifact so existing callers keep working.
@@ -21,9 +28,11 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import backend
 from repro.core.bounds import REL_ERR_AT_HALF
+from repro.core.families import quantize
 from repro.core.families.base import CompiledArtifact, base_meta, stack_heads
 from repro.core.maclaurin import ApproxModel, approximate
 from repro.core.rbf import SVMModel
@@ -31,18 +40,39 @@ from repro.kernels.common import TileConfig, tuning
 
 NAME = "maclaurin"
 TILE_KERNEL = "quadform"        # tuning-registry family the scorer keys on
+TILE_KERNEL_Q8 = "quadform_q8"  # ...and its int8-Hessian variant
 
 
-def compile(svm: SVMModel, **_opts) -> CompiledArtifact:      # noqa: A001
-    """Collapse every head of ``svm`` (Eq 3.7); one GEMM per head."""
+def compile(                                                   # noqa: A001
+    svm: SVMModel,
+    *,
+    dtype: str = "float32",
+    seed: int = 0,
+    holdout=None,
+    holdout_n: int = 256,
+    **_opts,
+) -> CompiledArtifact:
+    """Collapse every head of ``svm`` (Eq 3.7); one GEMM per head.
+
+    ``dtype="int8"`` additionally quantizes the collapsed weights
+    (``quantize_quadform_artifact``) and measures the quantization error
+    on a deterministic held-out sample (``holdout``/``seed``) so the
+    artifact carries its own error report.
+    """
+    quantize.check_dtype(dtype)
     ay2, b, k, multiclass = stack_heads(svm)
 
     def one(ay_k, b_k):
         return approximate(SVMModel(X=svm.X, alpha_y=ay_k, b=b_k, gamma=svm.gamma))
 
-    return _quadform_artifact(
+    art = _quadform_artifact(
         NAME, jax.vmap(one)(ay2, b), multiclass, rel_err_at_half=REL_ERR_AT_HALF
     )
+    if dtype == quantize.INT8_DTYPE:
+        art = quantize_quadform_artifact(
+            art, svm, seed=seed, holdout=holdout, holdout_n=holdout_n
+        )
+    return art
 
 
 def from_approx(approx: ApproxModel) -> CompiledArtifact:
@@ -61,7 +91,7 @@ def _quadform_artifact(
 ) -> CompiledArtifact:
     """Shared packer for every quadratic-form family (maclaurin, poly2)."""
     k, d = stacked.v.shape
-    flat = lambda x: jnp.reshape(jnp.asarray(x, jnp.float32), (k,))
+    flat = lambda x: jnp.reshape(jnp.asarray(x, jnp.float32), (k,))  # noqa: E731
     arrays = {
         "M": jnp.asarray(stacked.M, jnp.float32),
         "v": jnp.asarray(stacked.v, jnp.float32),
@@ -80,23 +110,81 @@ def _quadform_artifact(
     )
 
 
+def quantize_quadform_artifact(
+    art: CompiledArtifact,
+    svm: SVMModel | None = None,
+    *,
+    seed: int = 0,
+    holdout=None,
+    holdout_n: int = 256,
+) -> CompiledArtifact:
+    """Int8 variant of a compiled quadform artifact (maclaurin or poly2).
+
+    The stacked Hessian — the O(K d^2) bulk of the artifact — goes int8
+    with per-(head, column-group) scales; v goes int8 with per-head
+    scales; the four (K,) scalar vectors stay f32. The quantization error
+    vs the f32 parent is measured on ``holdout`` (or a deterministic
+    sample around the SVs when ``svm`` is given) and rides in the meta.
+    """
+    a = art.arrays
+    m_q, m_scale = quantize.quantize_col_groups(a["M"])     # (K,d,d), (K,G)
+    v_q, v_scale = quantize.quantize_rows(a["v"])           # (K,d), (K,)
+    q_art = CompiledArtifact(
+        family=art.family,
+        arrays={
+            "M": m_q, "M_scale": m_scale,
+            "v": v_q, "v_scale": v_scale,
+            "c": a["c"], "b": a["b"], "gamma": a["gamma"], "msq": a["msq"],
+        },
+        meta={
+            **art.meta,
+            "dtype": quantize.INT8_DTYPE,
+            "group_size": quantize.GROUP_SIZE,
+        },
+    )
+    Z = holdout
+    if Z is None and svm is not None:
+        from repro.core.families import fourier
+
+        Z = fourier.holdout_sample(svm, seed, holdout_n)
+    if Z is not None:
+        Z = jnp.asarray(np.asarray(Z, np.float32))
+        q_art = q_art.with_meta(**quantize.measure_quant_error(art, q_art, Z))
+    return q_art
+
+
 def score(
     artifact: CompiledArtifact, Z, *, config: TileConfig | None = None
 ):
     """(scores (n, K), valid_rows (n,)) through the fused quadform path.
 
     ``valid_rows[i]`` is the Eq 3.11 envelope check over ALL heads — a row
-    is servable by the fast path only if every head's bound holds.
+    is servable by the fast path only if every head's bound holds. The
+    envelope depends only on ||z||^2, gamma and msq, so the int8 variant
+    keeps the SAME validity contract as its f32 parent.
     """
     a = artifact.arrays
-    scores, _, valid = backend.quadform_heads(
-        Z, a["M"], a["v"], a["c"], a["b"], a["gamma"], a["msq"], config=config
-    )
+    if artifact.dtype == quantize.INT8_DTYPE:
+        col_scale = quantize.expand_group_scales(
+            a["M_scale"], artifact.d, int(artifact.meta["group_size"])
+        )                                                   # (K, d)
+        v = a["v"].astype(jnp.float32) * a["v_scale"][:, None]
+        scores, _, valid = backend.quadform_heads_q8(
+            Z, a["M"], col_scale, v, a["c"], a["b"], a["gamma"], a["msq"],
+            config=config,
+        )
+    else:
+        scores, _, valid = backend.quadform_heads(
+            Z, a["M"], a["v"], a["c"], a["b"], a["gamma"], a["msq"], config=config
+        )
     return scores, jnp.all(valid, axis=-1)
 
 
 def tile_lookup(artifact: CompiledArtifact, bucket: int) -> tuple[str, str]:
     """(kernel, shape_key) the tuning registry resolves for this bucket."""
-    return TILE_KERNEL, tuning.shape_key(
+    kernel = (
+        TILE_KERNEL_Q8 if artifact.dtype == quantize.INT8_DTYPE else TILE_KERNEL
+    )
+    return kernel, tuning.shape_key(
         d=artifact.d, k=artifact.num_heads, n=bucket
     )

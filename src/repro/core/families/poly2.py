@@ -19,18 +19,33 @@ from __future__ import annotations
 import jax
 
 from repro.core.bounds import POLY2_REL_ERR_AT_HALF
+from repro.core.families import quantize
 from repro.core.families.base import CompiledArtifact, stack_heads
 from repro.core.families import maclaurin as _mac
 from repro.core.poly2 import collapse_rbf_as_poly2
 from repro.core.rbf import SVMModel
-from repro.kernels.common import TileConfig
 
 NAME = "poly2"
 TILE_KERNEL = _mac.TILE_KERNEL                   # same fused serving kernel
+TILE_KERNEL_Q8 = _mac.TILE_KERNEL_Q8
 
 
-def compile(svm: SVMModel, **_opts) -> CompiledArtifact:      # noqa: A001
-    """Collapse every head via the poly-2 expansion (Eqs 3.13-3.16)."""
+def compile(                                                   # noqa: A001
+    svm: SVMModel,
+    *,
+    dtype: str = "float32",
+    seed: int = 0,
+    holdout=None,
+    holdout_n: int = 256,
+    **_opts,
+) -> CompiledArtifact:
+    """Collapse every head via the poly-2 expansion (Eqs 3.13-3.16).
+
+    Same artifact kind as maclaurin, so ``dtype="int8"`` rides the shared
+    quadform quantizer (per-column-group Hessian scales, measured error in
+    the meta).
+    """
+    quantize.check_dtype(dtype)
     ay2, b, k, multiclass = stack_heads(svm)
 
     def one(ay_k, b_k):
@@ -38,10 +53,15 @@ def compile(svm: SVMModel, **_opts) -> CompiledArtifact:      # noqa: A001
             SVMModel(X=svm.X, alpha_y=ay_k, b=b_k, gamma=svm.gamma)
         )
 
-    return _mac._quadform_artifact(
+    art = _mac._quadform_artifact(
         NAME, jax.vmap(one)(ay2, b), multiclass,
         rel_err_at_half=POLY2_REL_ERR_AT_HALF,
     )
+    if dtype == quantize.INT8_DTYPE:
+        art = _mac.quantize_quadform_artifact(
+            art, svm, seed=seed, holdout=holdout, holdout_n=holdout_n
+        )
+    return art
 
 
 # Same artifact kind => same scorer and tuning resolution as maclaurin.

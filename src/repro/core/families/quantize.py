@@ -1,0 +1,183 @@
+"""Symmetric int8 quantization of compiled artifacts.
+
+The paper's compiled forms already trade a controlled approximation error
+for serving cost; quantizing the compiled WEIGHTS trades a second, much
+smaller error for a ~4x memory-footprint win on the dominant operand
+(the stacked Hessian for the quadform families, the projection matrix
+for fourier). Cotter et al. motivate the error-for-cost exchange; Le et
+al.'s Fastfood shows the RFF weights are themselves an approximation
+whose error budget can absorb quantization noise.
+
+Scheme (weight-only, activations stay f32):
+
+  * **Per-feature-group scales.** Weights are quantized symmetrically
+    (zero-point 0) in groups of ``GROUP_SIZE`` = 16 along one axis, the
+    same grouping the int8 KV cache uses — one f32 scale per group keeps
+    the quantization error per column small enough that multiclass argmax
+    parity survives (a single per-tensor scale does not once one head has
+    a heavy-tailed Hessian).
+  * **Scales fold AFTER the GEMM.** Every quantized axis here is an
+    OUTPUT axis of its contraction (Hessian columns, RFF feature rows,
+    readout heads), so dequantization is a cheap VPU multiply on the
+    small GEMM result, never a materialized f32 copy of the weights —
+    the Pallas tiles fold it in VMEM, the XLA path is an int8->f32 GEMM
+    followed by one broadcast multiply.
+  * **Deterministic.** round-half-to-even in float64 on host: the same
+    model + seed quantizes to bit-identical int8 CODES AND SCALES in any
+    process. The full artifact digest additionally covers the measured
+    quantization error in the meta, which is computed through the
+    serving backend — so digests reproduce across processes on one
+    host/backend configuration (the registry's dedupe unit, gated in CI
+    by ``tools/check_artifact_determinism.py``) but, like fourier's
+    held-out error estimate and ``compile_model``'s measured-latency
+    report, are not bit-portable across backends or BLAS builds.
+
+Every quantized artifact ships its measured quantization error
+(``quant_mean_abs_err`` / ``quant_max_abs_err`` vs its own f32 parent on
+a deterministic held-out sample) in the meta, so the §4 budget search in
+``compile_model`` can treat int8 variants as first-class candidates.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+INT8_DTYPE = "int8"
+F32_DTYPE = "float32"
+DTYPES = (F32_DTYPE, INT8_DTYPE)
+
+# Channels per f32 sub-scale along the quantized axis. Matches the int8
+# KV-cache precedent: 16 is fine enough to keep argmax parity, coarse
+# enough that scale overhead is ~25% of the int8 payload at worst.
+GROUP_SIZE = 16
+
+_QMAX = 127.0
+
+
+def check_dtype(dtype: str) -> str:
+    if dtype not in DTYPES:
+        raise ValueError(f"artifact dtype must be one of {DTYPES}, got {dtype!r}")
+    return dtype
+
+
+def num_groups(n: int, group_size: int = GROUP_SIZE) -> int:
+    return -(-int(n) // group_size)
+
+
+def quantize_groups(
+    x, axis: int = -1, group_size: int = GROUP_SIZE
+) -> tuple[Array, Array]:
+    """Symmetric int8 quantization with one scale per ``group_size`` slab
+    along ``axis``.
+
+    Returns ``(q int8, scales f32)`` where ``scales`` has the quantized
+    axis reduced to ``num_groups``. All-zero groups get scale 1 (they
+    dequantize to exact zeros). Computed in float64 on host so the
+    int8 codes are platform-independent — part of the artifact's
+    deterministic-bytes contract.
+
+    The shipped artifact layouts use the pooled/rowwise specializations
+    below (``quantize_col_groups``, ``quantize_rows``); this per-slab
+    form is the primitive for the ROADMAP's finer per-(head, row, group)
+    Hessian scales if a real model ever loses argmax parity.
+    """
+    x = np.asarray(x, np.float64)
+    axis = axis % x.ndim
+    g = num_groups(x.shape[axis], group_size)
+    pad = g * group_size - x.shape[axis]
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = np.pad(x, widths)
+    shape = list(x.shape)
+    shape[axis : axis + 1] = [g, group_size]
+    xg = x.reshape(shape)
+    absmax = np.abs(xg).max(axis=axis + 1)
+    scale = np.where(absmax > 0.0, absmax / _QMAX, 1.0)
+    q = np.clip(np.rint(xg / np.expand_dims(scale, axis + 1)), -_QMAX, _QMAX)
+    shape[axis : axis + 2] = [g * group_size]
+    q = q.reshape(shape)
+    if pad:
+        q = np.take(q, np.arange(x.shape[axis] - pad), axis=axis)
+    return jnp.asarray(q.astype(np.int8)), jnp.asarray(scale.astype(np.float32))
+
+
+def quantize_col_groups(
+    x, group_size: int = GROUP_SIZE
+) -> tuple[Array, Array]:
+    """Symmetric int8 for a (..., r, n) operand with one scale per
+    (leading dims, n-group) — absmax pooled over the WHOLE row axis and
+    the group slab, so the scale layout is independent of r.
+
+    This is the stacked-Hessian layout: n is the Hessian's column axis
+    (an OUTPUT axis of ``Z @ M``), so the (..., G) scales fold onto the
+    GEMM result with one broadcast multiply; a scale that also varied
+    with the row (contraction) axis could not fold post-GEMM at all.
+    """
+    x = np.asarray(x, np.float64)
+    *lead, r, n = x.shape
+    g = num_groups(n, group_size)
+    pad = g * group_size - n
+    xp = np.pad(x, [(0, 0)] * len(lead) + [(0, 0), (0, pad)])
+    xg = xp.reshape(*lead, r, g, group_size)
+    absmax = np.abs(xg).max(axis=(-3, -1))                  # (*lead, G)
+    scale = np.where(absmax > 0.0, absmax / _QMAX, 1.0)
+    per_col = np.repeat(scale, group_size, axis=-1)         # (*lead, g*gs)
+    q = np.clip(np.rint(xp / per_col[..., None, :]), -_QMAX, _QMAX)
+    q = q[..., :n]
+    return jnp.asarray(q.astype(np.int8)), jnp.asarray(scale.astype(np.float32))
+
+
+def expand_group_scales(
+    scales: Array, n: int, group_size: int = GROUP_SIZE
+) -> Array:
+    """Broadcast per-group scales back to per-element along the last axis:
+    (..., G) -> (..., n). The inverse layout of ``quantize_groups`` so the
+    dequant multiply can fold onto a (..., n)-shaped GEMM output."""
+    return jnp.repeat(scales, group_size, axis=-1)[..., :n]
+
+
+def dequantize_groups(
+    q: Array, scales: Array, group_size: int = GROUP_SIZE
+) -> Array:
+    """f32 reconstruction (tests and trace-time constants, not hot paths)."""
+    return q.astype(jnp.float32) * expand_group_scales(
+        scales, q.shape[-1], group_size
+    )
+
+
+def quantize_rows(x) -> tuple[Array, Array]:
+    """Symmetric int8 with one scale per leading-axis row:
+    (..., n) -> (q (..., n) int8, scales (...,) f32). The layout for
+    operands whose OUTPUT axis is the leading one (RFF projection rows,
+    per-head readout weights)."""
+    x = np.asarray(x, np.float64)
+    absmax = np.abs(x).max(axis=-1)
+    scale = np.where(absmax > 0.0, absmax / _QMAX, 1.0)
+    q = np.clip(np.rint(x / scale[..., None]), -_QMAX, _QMAX)
+    return jnp.asarray(q.astype(np.int8)), jnp.asarray(scale.astype(np.float32))
+
+
+def measure_quant_error(f32_art, q_art, Z) -> dict:
+    """Scores of the quantized artifact vs its f32 parent on ``Z``.
+
+    This is the number that rides in the quantized artifact's meta: the
+    pure quantization error, separate from the family's approximation
+    error vs the exact expansion (which ``compile_model`` measures on
+    top). Deferred import: families call into this module at compile
+    time.
+    """
+    from repro.core import families
+
+    ref, _ = families.score_artifact(f32_art, Z)
+    got, _ = families.score_artifact(q_art, Z)
+    err = jnp.abs(got - ref)
+    return {
+        "quant_holdout_n": int(np.asarray(Z).shape[0]),
+        "quant_mean_abs_err": float(jnp.mean(err)),
+        "quant_max_abs_err": float(jnp.max(err)),
+    }

@@ -40,6 +40,11 @@ DEFAULTS: dict[str, TileConfig] = {
     "rbf_pred": TileConfig(block_n=256, block_m=256),
     "rff_score": TileConfig(block_n=256),
     "maclaurin_attn": TileConfig(chunk=128),
+    # int8-weight variants are separate tuning families: the quantized
+    # operand streams at a quarter of the f32 HBM bandwidth, so the
+    # optimal tilings diverge from the f32 kernels' on real hardware.
+    "quadform_q8": TileConfig(block_n=512),
+    "rff_score_q8": TileConfig(block_n=256),
 }
 
 # Canonical shape_key grammar: underscore-joined <dims><int> groups, e.g.

@@ -146,6 +146,104 @@ def quadform_heads_pallas(
     return scores[:n, :k], z_sq[:n], valid[:n, :k] > 0.0
 
 
+def _heads_kernel_q8(z_ref, m_ref, s_ref, v_ref, p_ref, o_ref, zsq_ref,
+                     valid_ref, *, block_k: int, d_pad: int):
+    """Int8-Hessian variant: ``m_ref`` is the stacked int8 operand,
+    ``s_ref`` the per-(head, column) f32 scales. The dequantization is
+    FUSED: each head's int8 slice feeds the MXU dot directly (upcast in
+    registers, never written back) and the scale folds onto the (BN, d)
+    GEMM result — one VPU multiply per head, no f32 copy of the Hessian
+    ever exists in VMEM."""
+    z = z_ref[...]                            # (BN, d) f32
+    v = v_ref[...]                            # (BK, d) f32 (dequantized)
+    s = s_ref[...]                            # (BK, d) per-column scales
+    p = p_ref[...]                            # (4, BK): c, b, gamma, ||x_M||^2
+    c, bias, gamma, msq = p[0], p[1], p[2], p[3]
+
+    z_sq = jnp.sum(z * z, axis=-1)            # (BN,)
+    quad_h, lin_h = [], []
+    for h in range(block_k):
+        zm = jax.lax.dot_general(
+            z, m_ref[:, h * d_pad:(h + 1) * d_pad].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )                                     # (BN, d)
+        zm = zm * s[h][None, :]               # fold the column scales here
+        quad_h.append(jnp.sum(zm * z, axis=-1))            # (BN,)
+        lin_h.append(jnp.sum(z * v[h][None, :], axis=-1))  # (BN,)
+    quad = jnp.stack(quad_h, axis=-1)         # (BN, BK)
+    lin = jnp.stack(lin_h, axis=-1)           # (BN, BK)
+    g_hat = c[None, :] + lin + quad
+    env = jnp.exp(-z_sq[:, None] * gamma[None, :])
+    o_ref[...] = env * g_hat + bias[None, :]
+    zsq_ref[...] = z_sq
+    valid_ref[...] = eq311_valid(z_sq, gamma, msq).astype(jnp.float32)
+
+
+def quadform_heads_q8_pallas(
+    Z: jax.Array,
+    M_q: jax.Array,
+    col_scale: jax.Array,
+    V: jax.Array,
+    c: jax.Array,
+    b: jax.Array,
+    gamma: jax.Array,
+    msq: jax.Array,
+    *,
+    config: TileConfig | None = None,
+    interpret: bool = False,
+):
+    """Fused K-head scores off an int8 stacked Hessian. Z: (n, d),
+    M_q: (K, d, d) int8, col_scale: (K, d) f32 (per-column dequant
+    scales, already expanded from the stored per-group form), V: (K, d)
+    f32; c/b/gamma/msq: (K,). Returns (scores (n, K), z_sq (n,),
+    valid (n, K)) — same contract as ``quadform_heads_pallas``, the int8
+    slice streams from HBM at a quarter of the f32 bandwidth."""
+    config = config or tuning.lookup("quadform_q8")
+    n, d = Z.shape
+    k = M_q.shape[0]
+    d_pad = tiles.lane_pad(d)
+    config = config.clamp_block_n(n)
+    block_n = config.block_n
+    block_k = config.resolve_block_k(k, d_pad)
+    n_pad = tiles.round_up(n, block_n)
+    k_pad = tiles.round_up(k, block_k)
+
+    Zp = tiles.pad_tail(Z.astype(jnp.float32), n_pad, d_pad)
+    Mp = tiles.pad_tail(M_q.astype(jnp.int8), d_pad, d_pad)
+    Mp = tiles.pad_axis(Mp, 0, k_pad)         # zero Hessians for padded heads
+    m_kd = jnp.transpose(Mp, (1, 0, 2)).reshape(d_pad, k_pad * d_pad)
+    Sp = tiles.pad_tail(col_scale.astype(jnp.float32), k_pad, d_pad)
+    Vp = tiles.pad_tail(V.astype(jnp.float32), k_pad, d_pad)
+    params = jnp.stack(
+        [jnp.ravel(c), jnp.ravel(b), jnp.ravel(gamma), jnp.ravel(msq)]
+    ).astype(jnp.float32)                                  # (4, K)
+    params = tiles.pad_axis(params, 1, k_pad)
+
+    scores, z_sq, valid = pl.pallas_call(
+        functools.partial(_heads_kernel_q8, block_k=block_k, d_pad=d_pad),
+        grid=(k_pad // block_k, n_pad // block_n),
+        in_specs=[
+            pl.BlockSpec((block_n, d_pad), lambda j, i: (i, 0)),
+            pl.BlockSpec((d_pad, block_k * d_pad), lambda j, i: (0, j)),
+            pl.BlockSpec((block_k, d_pad), lambda j, i: (j, 0)),
+            pl.BlockSpec((block_k, d_pad), lambda j, i: (j, 0)),
+            pl.BlockSpec((4, block_k), lambda j, i: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, block_k), lambda j, i: (i, j)),
+            pl.BlockSpec((block_n,), lambda j, i: (i,)),
+            pl.BlockSpec((block_n, block_k), lambda j, i: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, k_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Zp, m_kd, Sp, Vp, params)
+    return scores[:n, :k], z_sq[:n], valid[:n, :k] > 0.0
+
+
 def quadform_predict_pallas(
     Z: jax.Array,
     M: jax.Array,

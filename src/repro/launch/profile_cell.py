@@ -15,8 +15,7 @@ import sys
 from collections import defaultdict
 
 from repro.launch.hlo_cost import (
-    CostModel, _CALLS_RE, _COND_RE, _TRIP_RE, _COLLECTIVES, _MATERIALIZING,
-    _first_shapes, _shape_elems,
+    CostModel, _CALLS_RE, _TRIP_RE, _COLLECTIVES, _MATERIALIZING,
 )
 
 

@@ -130,7 +130,6 @@ def init_params(cfg: ModelConfig, key):
     elif cfg.family == "vlm":
         n_cross = cfg.n_layers // (cfg.cross_attn_every or cfg.n_layers)
         n_self = cfg.n_layers - n_cross
-        per_block = n_self // max(n_cross, 1)
         k_self, k_cross = jax.random.split(k_layers)
         p_self, s_self = _stack(lambda k: _dense_layer_params(cfg, k), k_self, n_self)
         params["layers"], spec["layers"] = p_self, s_self

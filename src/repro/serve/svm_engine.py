@@ -5,9 +5,14 @@ A stream of feature vectors needs decision values at minimum latency
 approximation ARTIFACT — any ``repro.core.families`` family: the paper's
 Maclaurin quadratic form, the §3.2 poly-2 expansion, or random Fourier
 features — through that family's fused backend path, and enforces the
-family's accuracy contract at run time. A bare ``ApproxModel`` is still
-accepted (wrapped into a maclaurin artifact), so pre-families callers
-keep working. Design:
+family's accuracy contract at run time. Artifacts may be f32 or int8
+(``dtype="int8"`` compiles): the family's scorer dispatches on
+``artifact.dtype`` to the fused dequantizing kernels, each bucket's
+``TileConfig`` resolves under the int8 kernel's own tuning family
+(``quadform_q8`` / ``rff_score_q8``), and the engine's contract is
+otherwise unchanged — same buckets, same validity mask, same fallback.
+A bare ``ApproxModel`` is still accepted (wrapped into a maclaurin
+artifact), so pre-families callers keep working. Design:
 
 Shape buckets, bounded jit cache
   Traffic arrives with arbitrary batch sizes; naive jit would recompile
@@ -281,6 +286,7 @@ class SVMEngine:
             )
         self._family = families.get_family(self.artifact.family)
         self.family = self.artifact.family
+        self.dtype = self.artifact.dtype      # weight storage: float32 / int8
         self.exact = exact
         self.multiclass = self.artifact.multiclass
         self.num_heads = self.artifact.num_heads

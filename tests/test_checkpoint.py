@@ -5,7 +5,6 @@ import os
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.train import checkpoint as ckpt
 from repro.data.loader import ShardedLoader

@@ -275,13 +275,16 @@ def test_compile_model_meets_budget_and_reports():
     art = compile_model(m, Budget(max_err=0.05, metric="mean_abs"), seed=3)
     rep = art.meta["compile_report"]
     assert rep["chosen"] == art.family
-    rows = {r["family"]: r for r in rep["families"]}
-    assert set(rows) == set(FAMILIES)
-    assert rows[art.family]["meets_budget"]
-    assert rows[art.family]["mean_abs"] <= rep["limit"]
+    assert rep["chosen_dtype"] == art.dtype
+    # candidate rows cover the (family, dtype) grid
+    rows = {(r["family"], r["dtype"]): r for r in rep["families"]}
+    assert {f for f, _ in rows} == set(FAMILIES)
+    chosen = rows[(art.family, art.dtype)]
+    assert chosen["meets_budget"]
+    assert chosen["mean_abs"] <= rep["limit"]
     # chosen is the fastest among budget-meeting candidates
     ok = [r for r in rep["families"] if r["meets_budget"]]
-    assert rows[art.family]["latency_ms"] == min(r["latency_ms"] for r in ok)
+    assert chosen["latency_ms"] == min(r["latency_ms"] for r in ok)
     # the artifact actually serves
     eng = SVMEngine(art, m)
     vals, _ = eng.predict(np.asarray(m.X[:9]))

@@ -9,7 +9,6 @@ import pytest
 from jax.sharding import Mesh
 
 from repro.core import approximate, backend, decision_function, gamma_max
-from repro.core.maclaurin import ApproxModel
 from repro.kernels.common import TileConfig
 from repro.data.synthetic import make_blobs
 from repro.kernels.quadform.kernel import quadform_heads_pallas

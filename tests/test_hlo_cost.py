@@ -3,7 +3,6 @@ analysis on loop-free programs, and against hand-math on scanned ones."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_cost import analyze_text, normalize_cost_analysis

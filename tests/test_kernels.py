@@ -1,7 +1,6 @@
 """Per-kernel validation: shape/dtype sweeps, Pallas (interpret) vs jnp oracle."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

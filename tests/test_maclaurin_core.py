@@ -3,7 +3,6 @@ and the degree-2 polynomial relation (§3.2). Includes hypothesis property
 tests of the system invariants."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -3,7 +3,6 @@ statistics, prefill/serve step factories."""
 
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest

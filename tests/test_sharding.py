@@ -5,12 +5,10 @@ import os
 import subprocess
 import sys
 
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.partitioning import (
-    AxisRules,
     DEFAULT_RULES,
     TP_ONLY_RULES,
     abstract_mesh,

@@ -1,7 +1,6 @@
 """SVM substrate tests: LS-SVM / dual SVC trainers, multiclass, engine."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import (

@@ -1,0 +1,123 @@
+"""CI gate over ``results/BENCH_serving.json`` STRUCTURE, not numbers.
+
+Latency numbers from shared CI runners are noise and are never asserted.
+What IS asserted are the properties that hold on any host or the build
+is broken:
+
+  * ``model_size``: every int8 variant serializes >= 3x smaller than its
+    f32 parent, keeps label/argmax parity with the f32 engine, carries a
+    distinct content digest, and its meta's reported quantization error
+    reproduces on the deterministic holdout (measured-within-report);
+  * ``family_compare``: every family was measured at both dtypes, and
+    quantization does not blow up the family's measured error;
+  * ``runtime_throughput``: coalescing added ZERO steady-state
+    recompiles.
+
+Usage: ``python tools/check_bench_invariants.py [path-to-json]``
+Exits non-zero listing every violated invariant.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+MIN_SIZE_RATIO = 3.0
+MIN_LABEL_PARITY = 0.99
+QUANT_ERR_REPRO_RTOL = 0.05     # measured == reported up to float noise
+QUANT_ERR_SLACK = 0.01          # int8 family error <= f32 error + this
+
+DEFAULT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "BENCH_serving.json",
+)
+
+
+def check_model_size(payload: dict, problems: list[str]) -> None:
+    section = payload.get("model_size")
+    if not section or not section.get("rows"):
+        problems.append("model_size: section missing or empty")
+        return
+    for r in section["rows"]:
+        tag = f"model_size[{r['family']} K={r['K']} d={r['d']}]"
+        if r["ratio"] < MIN_SIZE_RATIO:
+            problems.append(
+                f"{tag}: int8 ratio {r['ratio']} < {MIN_SIZE_RATIO}"
+            )
+        if r["label_parity"] < MIN_LABEL_PARITY:
+            problems.append(
+                f"{tag}: label parity {r['label_parity']} < {MIN_LABEL_PARITY}"
+            )
+        if r["int8_digest"] == r["f32_digest"]:
+            problems.append(f"{tag}: int8 digest equals f32 digest")
+        for stat in ("mean_abs_err", "max_abs_err"):
+            reported = r[f"quant_{stat}"]
+            measured = r[f"remeasured_{stat}"]
+            if abs(measured - reported) > 1e-9 + QUANT_ERR_REPRO_RTOL * reported:
+                problems.append(
+                    f"{tag}: quant {stat} reported {reported:.3e} does not "
+                    f"reproduce (measured {measured:.3e})"
+                )
+
+
+def check_family_compare(payload: dict, problems: list[str]) -> None:
+    section = payload.get("family_compare")
+    if not section or not section.get("rows"):
+        problems.append("family_compare: section missing or empty")
+        return
+    rows = section["rows"]
+    by_key = {
+        (r["K"], r["d"], r["family"], r.get("dtype")): r
+        for r in rows
+    }
+    cells = {(r["K"], r["d"]) for r in rows}
+    for K, d in sorted(cells):
+        for family in ("maclaurin", "poly2", "fourier"):
+            f32 = by_key.get((K, d, family, "float32"))
+            q8 = by_key.get((K, d, family, "int8"))
+            tag = f"family_compare[{family} K={K} d={d}]"
+            if f32 is None or q8 is None:
+                problems.append(f"{tag}: missing a dtype row "
+                                f"(f32={f32 is not None}, int8={q8 is not None})")
+                continue
+            if q8["mean_abs_err"] > f32["mean_abs_err"] + QUANT_ERR_SLACK:
+                problems.append(
+                    f"{tag}: int8 mean error {q8['mean_abs_err']:.4g} blows "
+                    f"past f32 {f32['mean_abs_err']:.4g} + {QUANT_ERR_SLACK}"
+                )
+
+
+def check_runtime(payload: dict, problems: list[str]) -> None:
+    section = payload.get("runtime_throughput")
+    if not section:
+        problems.append("runtime_throughput: section missing")
+        return
+    recompiles = section.get("meta", {}).get("steady_state_recompiles")
+    if recompiles != 0:
+        problems.append(
+            f"runtime_throughput: steady_state_recompiles == {recompiles!r}, "
+            f"must be 0"
+        )
+
+
+def main(argv: list[str]) -> int:
+    path = argv[1] if len(argv) > 1 else DEFAULT_PATH
+    with open(path) as f:
+        payload = json.load(f)
+    problems: list[str] = []
+    check_model_size(payload, problems)
+    check_family_compare(payload, problems)
+    check_runtime(payload, problems)
+    if problems:
+        print(f"[bench-invariants] {len(problems)} violation(s) in {path}:")
+        for p in problems:
+            print(f"  FAIL {p}")
+        return 1
+    print(f"[bench-invariants] OK — model_size, family_compare and "
+          f"runtime_throughput invariants hold in {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
