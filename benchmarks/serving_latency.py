@@ -39,6 +39,23 @@ Five questions, all measured for real on this host:
    ``engine.predict`` per request (closed loop) — the scheduler must win
    at >= 8 clients, with ZERO steady-state recompiles (asserted via
    ``jit_cache_size`` before/after the stress).
+6. What happens when offered load exceeds capacity?  ``overload`` pins
+   the per-flush service time with the deterministic fault injector's
+   slow-step hook, then bursts far past that capacity through a runtime
+   with a bounded queue. Admission control must shed the excess with
+   typed ``RuntimeOverloaded`` (every shed carries a ``retry_after_s``
+   hint), every ADMITTED future must resolve (zero hung futures), the
+   shed accounting must balance to the request (admitted + shed ==
+   submitted), and p99 of the admitted traffic stays bounded because the
+   queue is — all gated by ``tools/check_bench_invariants.py``.
+7. What does breaker-open degraded serving cost?  ``degraded_mode``
+   trips the per-model circuit breaker with scripted engine faults,
+   then measures the exact streaming ``rbf_pred`` degraded path next to
+   the healthy fast path on identical traffic. The gated invariants:
+   the breaker really is open during the degraded measurement, every
+   degraded request is served (none shed, none hung), and degraded
+   serving adds ZERO fast-path recompiles (it compiles its own slow
+   variants, never touching the bucket cache).
 
 Emits BENCH_serving.json (benchmarks/common.save_json) so later perf PRs
 have a trajectory to compare against.
@@ -46,6 +63,7 @@ have a trajectory to compare against.
 
 from __future__ import annotations
 
+import concurrent.futures
 import json
 import os
 import threading
@@ -59,7 +77,12 @@ from benchmarks.common import RESULTS_DIR, fmt_table, save_json, timeit
 from repro.core import approximate, backend, families, gamma_max
 from repro.core.rbf import SVMModel, rbf_kernel
 from repro.kernels.common import TileConfig, autotune, tuning
-from repro.serve.runtime import Runtime
+from repro.serve.runtime import (
+    ENGINE_STEP,
+    FaultInjector,
+    Runtime,
+    RuntimeOverloaded,
+)
 from repro.kernels.quadform.ref import quadform_heads_ref
 from repro.serve.svm_engine import SVMEngine, bucket_size
 
@@ -104,6 +127,23 @@ RUNTIME_REQS_PER_CLIENT = 80
 RUNTIME_REQ_ROWS = 4
 RUNTIME_FLUSH_ROWS = 256
 RUNTIME_MAX_WAIT_US = 1000.0
+
+# overload: the slow-step injection pins service capacity at roughly
+# flush_rows / slow_step_s rows/s on ANY host, so the burst (threads
+# submitting back-to-back with sheds returning instantly) reliably
+# offers a large multiple of capacity without tuning per machine.
+OVERLOAD_QUEUE_ROWS = 256
+OVERLOAD_FLUSH_ROWS = 64
+OVERLOAD_REQ_ROWS = 8
+OVERLOAD_CLIENTS = 8
+OVERLOAD_REQS_PER_CLIENT = 60
+OVERLOAD_SLOW_STEP_S = 0.02
+OVERLOAD_RESULT_TIMEOUT_S = 60.0
+
+# degraded_mode: per-request latency of breaker-open exact serving next
+# to the healthy fast path on identical traffic
+DEGRADED_BATCH = 256
+DEGRADED_REPEATS = 50
 
 SMOKE = False           # set by --smoke: same sections, fewer repeats
 
@@ -558,6 +598,207 @@ def bench_runtime_throughput() -> dict:
     }
 
 
+def bench_overload() -> dict:
+    """Admission control under a burst far past capacity.
+
+    The fault injector's slow-step hook pins per-flush service time at
+    ``OVERLOAD_SLOW_STEP_S`` (capacity ~= flush_rows / slow_step_s
+    rows/s regardless of host speed); ``OVERLOAD_CLIENTS`` threads then
+    submit back-to-back — sheds return instantly, so the offered rate
+    is a large multiple of capacity by construction. Everything the CI
+    gate asserts is deterministic accounting, not timing: sheds are
+    typed ``RuntimeOverloaded`` with a ``retry_after_s`` hint, admitted
+    + shed == submitted on both the client and telemetry side, every
+    admitted future resolves under a hard timeout (zero hung futures),
+    and the burst adds zero fast-path recompiles.
+    """
+    reqs = 15 if SMOKE else OVERLOAD_REQS_PER_CLIENT
+    m = _model(seed=5)
+    art = families.maclaurin.compile(m)
+    fi = FaultInjector(seed=5, slow_step_rate=1.0,
+                       slow_step_s=OVERLOAD_SLOW_STEP_S)
+    rt = Runtime(
+        max_wait_us=500.0,
+        flush_rows=OVERLOAD_FLUSH_ROWS,
+        max_queue_rows=OVERLOAD_QUEUE_ROWS,
+        engine_opts=dict(min_bucket=32, max_batch=1024),
+        fault_injector=fi,
+    )
+    rt.publish("hot", art, exact=m)
+    rt.warmup("hot")
+    rng = np.random.default_rng(13)
+    warm = rng.standard_normal((OVERLOAD_REQ_ROWS, D)).astype(np.float32) * 0.3
+    rt.predict("hot", warm)                            # warm the serving path
+    _, engine = rt.registry.get_engine("hot")
+    cache_before = engine.jit_cache_size()
+
+    work = [
+        [rng.standard_normal((OVERLOAD_REQ_ROWS, D)).astype(np.float32) * 0.3
+         for _ in range(reqs)]
+        for _ in range(OVERLOAD_CLIENTS)
+    ]
+    admitted, retry_hints = [], []
+    lock = threading.Lock()
+
+    def client(batches):
+        for Z in batches:
+            try:
+                f = rt.submit("hot", Z)
+            except RuntimeOverloaded as e:
+                with lock:
+                    retry_hints.append(float(e.retry_after_s))
+            else:
+                with lock:
+                    admitted.append(f)
+
+    threads = [threading.Thread(target=client, args=(w,)) for w in work]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    t_burst = time.perf_counter() - t0
+
+    # every admitted future must resolve — a future still pending after
+    # the hard timeout is exactly the hang the robustness layer forbids
+    hung = 0
+    for f in admitted:
+        try:
+            f.result(timeout=OVERLOAD_RESULT_TIMEOUT_S).values
+        except concurrent.futures.TimeoutError:
+            hung += 1
+
+    st = rt.stats("hot")
+    cache_after = engine.jit_cache_size()
+    rt.close()
+
+    submitted = OVERLOAD_CLIENTS * reqs
+    offered_rows_s = submitted * OVERLOAD_REQ_ROWS / t_burst
+    capacity_rows_s = OVERLOAD_FLUSH_ROWS / OVERLOAD_SLOW_STEP_S
+    meta = {
+        "clients": OVERLOAD_CLIENTS,
+        "submitted": submitted,
+        "admitted": len(admitted),
+        "shed_requests": len(retry_hints),
+        "shed_requests_telemetry": st["shed_requests"],
+        "retry_after_s_min": round(min(retry_hints), 4) if retry_hints else None,
+        "retry_after_s_max": round(max(retry_hints), 4) if retry_hints else None,
+        "hung_futures": hung,
+        "queue_rows_after_drain": st["queue_rows"],
+        # the telemetry gauge counts a popped batch until its flush is
+        # recorded, so the provable high-water is waiting rows (bounded
+        # by admission) + the batch in execution: 2x the bound
+        "max_queue_rows_observed": st["max_queue_rows"],
+        "max_queue_rows_bound": OVERLOAD_QUEUE_ROWS,
+        "offered_rows_s": round(offered_rows_s, 1),
+        "pinned_capacity_rows_s": round(capacity_rows_s, 1),
+        "burst_multiple": round(offered_rows_s / capacity_rows_s, 1),
+        "admitted_p50_ms": st["latency"]["p50_ms"],
+        "admitted_p99_ms": st["latency"]["p99_ms"],
+        "tightened_waits": st["tightened_waits"],
+        "steady_state_recompiles": cache_after - cache_before,
+    }
+    print("[serving] overload: bounded queue under a burst past capacity")
+    print(f"[serving] {meta}")
+    return {
+        "note": (
+            "slow-step injection pins service capacity, then an 8-thread "
+            "burst offers a large multiple of it; admission sheds the "
+            "excess with RuntimeOverloaded(retry_after_s) and every "
+            "admitted future resolves; CI gates the accounting "
+            "(tools/check_bench_invariants.py)"
+        ),
+        "req_rows": OVERLOAD_REQ_ROWS,
+        "flush_rows": OVERLOAD_FLUSH_ROWS,
+        "slow_step_s": OVERLOAD_SLOW_STEP_S,
+        "meta": meta,
+    }
+
+
+def bench_degraded_mode() -> dict:
+    """Breaker-open exact serving next to the healthy fast path.
+
+    Scripted engine faults trip the per-model circuit breaker; with a
+    long ``reset_after_s`` it stays open for the whole degraded
+    measurement, so every request is served by the exact streaming
+    ``rbf_pred`` path. The slowdown ratio is the price of graceful
+    degradation (the alternative is failing the requests); the gated
+    invariants are that the breaker really was open, nothing was shed
+    or left unserved, and the fast-path bucket cache gained nothing.
+    """
+    repeats = 10 if SMOKE else DEGRADED_REPEATS
+    m = _model(seed=6)
+    art = families.maclaurin.compile(m)
+    fi = FaultInjector(seed=6)
+    rt = Runtime(
+        max_wait_us=500.0,
+        flush_rows=DEGRADED_BATCH,
+        engine_opts=dict(min_bucket=32, max_batch=1024),
+        breaker=dict(fail_threshold=3, reset_after_s=600.0),
+        fault_injector=fi,
+    )
+    rt.publish("hot", art, exact=m)
+    rt.warmup("hot")
+    rng = np.random.default_rng(17)
+    Z = rng.standard_normal((DEGRADED_BATCH, D)).astype(np.float32) * 0.3
+
+    def timed_predicts():
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            rt.predict("hot", Z)
+            times.append(time.perf_counter() - t0)
+        t = np.asarray(times) * 1e3
+        return (round(float(np.percentile(t, 50)), 4),
+                round(float(np.percentile(t, 99)), 4))
+
+    rt.predict("hot", Z)                                  # warm fast path
+    healthy_p50, healthy_p99 = timed_predicts()
+    _, engine = rt.registry.get_engine("hot")
+    cache_before = engine.jit_cache_size()
+
+    # trip the breaker: 3 scripted consecutive engine-step faults
+    fi.fail_next(ENGINE_STEP, 3)
+    failed_trips = 0
+    for _ in range(3):
+        try:
+            rt.predict("hot", Z)
+        except Exception:
+            failed_trips += 1
+
+    rt.predict("hot", Z)                  # warm the degraded slow variant
+    degraded_p50, degraded_p99 = timed_predicts()
+    st = rt.stats("hot")
+    cache_after = engine.jit_cache_size()
+    rt.close()
+
+    meta = {
+        "batch": DEGRADED_BATCH,
+        "healthy_p50_ms": healthy_p50,
+        "healthy_p99_ms": healthy_p99,
+        "degraded_p50_ms": degraded_p50,
+        "degraded_p99_ms": degraded_p99,
+        "slowdown_p50": round(degraded_p50 / max(healthy_p50, 1e-9), 2),
+        "breaker_state": st["breaker"]["state"],
+        "breaker_trips": st["breaker"]["trips"],
+        "tripping_failures": failed_trips,
+        "degraded_requests": st["breaker"]["degraded_requests"],
+        "breaker_shed_requests": st["breaker"]["shed_requests"],
+        "steady_state_recompiles": cache_after - cache_before,
+    }
+    print("[serving] degraded mode: breaker-open exact path vs fast path")
+    print(f"[serving] {meta}")
+    return {
+        "note": (
+            "scripted faults trip the circuit breaker (reset_after_s "
+            "600 keeps it open), then the same traffic is measured on "
+            "the exact streaming degraded path; CI gates breaker state, "
+            "full service (no sheds) and zero fast-path recompiles"
+        ),
+        "meta": meta,
+    }
+
+
 SECTIONS = (
     "engine",
     "head_scaling",
@@ -565,6 +806,8 @@ SECTIONS = (
     "model_size",
     "block_sweep",
     "runtime_throughput",
+    "overload",
+    "degraded_mode",
 )
 
 
@@ -626,6 +869,10 @@ def run(sections: list[str] | None = None):
         }
     if "runtime_throughput" in chosen:
         payload["runtime_throughput"] = bench_runtime_throughput()
+    if "overload" in chosen:
+        payload["overload"] = bench_overload()
+    if "degraded_mode" in chosen:
+        payload["degraded_mode"] = bench_degraded_mode()
     path = save_json("BENCH_serving.json", payload)
     print(f"[serving] wrote {path}")
     return payload

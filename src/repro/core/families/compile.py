@@ -37,15 +37,28 @@ class Budget:
     "max_abs") of family scores vs the exact expansion on the
     verification sample. ``relative=True`` scales the bound by the mean
     |exact score| so one budget works across differently-scaled models.
+
+    ``min_valid`` (optional) additionally requires the candidate's §4
+    validity verdict to cover at least that fraction of the sample rows.
+    Error and validity are different axes: a Maclaurin artifact can
+    score a drifted sample accurately yet flag every row invalid — at
+    serve time all of it would route through the exact fallback, so the
+    artifact is "correct" but never FAST on that traffic. A caller whose
+    goal is fast-path coverage (e.g. the ``DriftGuard`` recompiling
+    against drifted traffic) sets ``min_valid`` to make the search skip
+    such candidates in favor of one whose envelope fits the sample.
     """
 
     max_err: float
     metric: str = "mean_abs"
     relative: bool = False
+    min_valid: float | None = None
 
     def __post_init__(self):
         if self.metric not in ("mean_abs", "max_abs"):
             raise ValueError(f"unknown budget metric {self.metric!r}")
+        if self.min_valid is not None and not 0.0 <= self.min_valid <= 1.0:
+            raise ValueError(f"min_valid must be in [0, 1], got {self.min_valid}")
 
     def limit(self, exact_scale: float) -> float:
         return self.max_err * (exact_scale if self.relative else 1.0)
@@ -123,21 +136,28 @@ def compile_model(
                     "meets_budget": False,
                 })
                 continue
-            scores, _ = fam.score(art, Z)
+            scores, valid = fam.score(art, Z)
             err = jnp.abs(scores - exact)
             measured = {
                 "mean_abs": float(jnp.mean(err)),
                 "max_abs": float(jnp.max(err)),
             }
+            # fraction of sample rows the candidate would fast-path at
+            # serve time (per-row mask for the quadform families, the
+            # per-artifact verdict broadcast for fourier)
+            valid_fraction = float(jnp.mean(jnp.asarray(valid, jnp.float32)))
             step = jax.jit(lambda Zb, _f=fam, _a=art: _f.score(_a, Zb)[0])
             latency_ms = 1e3 * autotune.measure(
                 lambda: step(Z), repeats=timing_repeats, warmup=2
             )
-            ok = measured[budget.metric] <= limit
+            ok = measured[budget.metric] <= limit and (
+                budget.min_valid is None or valid_fraction >= budget.min_valid
+            )
             row = {
                 "family": name,
                 "dtype": art.dtype,
                 **measured,
+                "valid_fraction": round(valid_fraction, 4),
                 "latency_ms": round(latency_ms, 4),
                 # in-memory array bytes: constant-time, and the serialized
                 # npz tracks it within ~2 KB of header (measured per

@@ -1,5 +1,16 @@
 from repro.serve.decode_step import make_serve_step, make_prefill_step
-from repro.serve.runtime import ArtifactRegistry, MicroBatcher, Runtime
+from repro.serve.runtime import (
+    ArtifactCorrupt,
+    ArtifactRegistry,
+    BatcherClosed,
+    CircuitBreaker,
+    DeadlineExceeded,
+    DriftGuard,
+    FaultInjector,
+    MicroBatcher,
+    Runtime,
+    RuntimeOverloaded,
+)
 from repro.serve.svm_engine import (
     EngineResult,
     EngineStats,
@@ -11,9 +22,16 @@ from repro.serve.svm_engine import (
 __all__ = [
     "make_serve_step",
     "make_prefill_step",
+    "ArtifactCorrupt",
     "ArtifactRegistry",
+    "BatcherClosed",
+    "CircuitBreaker",
+    "DeadlineExceeded",
+    "DriftGuard",
+    "FaultInjector",
     "MicroBatcher",
     "Runtime",
+    "RuntimeOverloaded",
     "SVMEngine",
     "EngineResult",
     "EngineStats",

@@ -1,0 +1,62 @@
+"""Typed failure taxonomy for the serving runtime.
+
+Every way the runtime can refuse or fail a request has a distinct,
+catchable type — a caller (or an HTTP front door mapping these onto
+status codes) never has to parse a message string:
+
+  * ``RuntimeOverloaded`` — admission control shed the request before it
+    entered the queue (bounded queues, or a tripped breaker with no
+    exact model to degrade to). Carries ``retry_after_s``, the server's
+    own estimate of when capacity returns (HTTP 503 + Retry-After).
+  * ``DeadlineExceeded`` — the request was admitted but its per-submit
+    deadline expired before a flush could serve it (HTTP 504).
+  * ``BatcherClosed`` — the model's batcher was retired (shutdown, or an
+    engine eviction/hot-reload); ``Runtime.submit`` retries internally,
+    a bare ``MicroBatcher`` caller sees it directly.
+  * ``ArtifactCorrupt`` — an artifact file failed structural validation
+    or its bytes no longer hash to the registered digest; the registry
+    QUARANTINES the entry (no retry loop) and every subsequent resolve
+    fails fast with this error until the file is repaired/re-registered.
+  * ``InjectedFault`` — raised only by the deterministic fault-injection
+    harness (``repro.serve.runtime.faults``); chaos tests assert on this
+    type to distinguish injected failures from real bugs.
+"""
+
+from __future__ import annotations
+
+
+class RuntimeOverloaded(RuntimeError):
+    """Request shed by admission control; retry after ``retry_after_s``."""
+
+    def __init__(self, message: str, retry_after_s: float = 0.0):
+        super().__init__(message)
+        self.retry_after_s = float(retry_after_s)
+
+
+class DeadlineExceeded(TimeoutError):
+    """Admitted request could not be flushed within its deadline."""
+
+
+class BatcherClosed(RuntimeError):
+    """Raised by ``submit`` on a closed batcher (e.g. retired after an
+    engine reload); ``Runtime`` re-resolves and retries on a fresh one."""
+
+
+class ArtifactCorrupt(RuntimeError):
+    """Artifact file is structurally invalid or no longer matches its
+    registered content digest. The entry is quarantined, not retried."""
+
+    def __init__(self, message: str, *, digest: str | None = None,
+                 path: str | None = None):
+        super().__init__(message)
+        self.digest = digest
+        self.path = path
+
+
+class InjectedFault(RuntimeError):
+    """A fault deliberately raised by the fault-injection harness."""
+
+    def __init__(self, site: str, ordinal: int):
+        super().__init__(f"injected fault at {site!r} (check #{ordinal})")
+        self.site = site
+        self.ordinal = ordinal

@@ -24,6 +24,18 @@ SHA-256 of the artifact's deterministic bytes (``CompiledArtifact
     registration keeps them (they are the only copy). Eviction never
     touches the entry's identity — the digest and aliases survive, and
     the next use transparently reloads.
+  * **corruption quarantine** — content addressing makes disk integrity
+    CHECKABLE, so the registry checks it: ``add_file`` structurally
+    validates the ``.npz`` (zip CRC over every member + header present)
+    and raises a typed ``ArtifactCorrupt`` for a flipped-bytes or
+    truncated file; every load-from-path re-hashes the file and refuses
+    to build an engine unless the SHA-256 still equals the registered
+    digest — a file mutated on disk AFTER indexing can never serve
+    under its old identity. A corrupt entry is QUARANTINED: subsequent
+    resolves fail fast with the stored reason instead of re-reading a
+    bad file in a retry loop. (Injected transient load faults — the
+    chaos harness's ``registry_load`` site — do NOT quarantine: the
+    next resolve retries, which is the point of "transient".)
 """
 
 from __future__ import annotations
@@ -33,8 +45,12 @@ import hashlib
 import itertools
 import os
 import threading
+import zipfile
 
 from repro.core.families import CompiledArtifact
+from repro.core.families.base import _HEADER_MEMBER
+from repro.serve.runtime.errors import ArtifactCorrupt
+from repro.serve.runtime.faults import REGISTRY_LOAD, FaultInjector
 from repro.serve.svm_engine import SVMEngine
 
 _DIGEST_LEN = 64           # sha256 hex
@@ -52,7 +68,43 @@ class RegistryEntry:
     nbytes: int = 0                         # artifact array bytes once known
     tick: int = 0                           # LRU clock stamp
     evictions: int = 0
+    quarantined: str | None = None          # corruption reason; fail fast
     lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+
+
+def _hash_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _validate_npz(path: str, digest: str) -> None:
+    """Structural check of a saved artifact: a readable zip, every member
+    CRC-clean, header member present. Catches truncation and byte flips
+    without deserializing any array (CRC pass streams the file once).
+    """
+    try:
+        with zipfile.ZipFile(path) as zf:
+            bad = zf.testzip()
+            names = set(zf.namelist())
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise ArtifactCorrupt(
+            f"{path} is not a readable artifact npz: {e}",
+            digest=digest, path=path,
+        ) from e
+    if bad is not None:
+        raise ArtifactCorrupt(
+            f"{path}: member {bad!r} fails CRC (corrupt bytes)",
+            digest=digest, path=path,
+        )
+    if f"{_HEADER_MEMBER}.npy" not in names:
+        raise ArtifactCorrupt(
+            f"{path}: missing {_HEADER_MEMBER!r} header (truncated or not "
+            f"an artifact)",
+            digest=digest, path=path,
+        )
 
 
 class ArtifactRegistry:
@@ -62,10 +114,12 @@ class ArtifactRegistry:
         memory_budget_bytes: int | None = None,
         warmup_on_load: bool = True,
         engine_opts: dict | None = None,
+        fault_injector: FaultInjector | None = None,
     ):
         self.memory_budget_bytes = memory_budget_bytes
         self.warmup_on_load = warmup_on_load
         self.engine_opts = dict(engine_opts or {})
+        self.faults = fault_injector         # consulted at every path load
         self._entries: dict[str, RegistryEntry] = {}
         self._aliases: dict[str, str] = {}
         self._lock = threading.RLock()
@@ -74,6 +128,7 @@ class ArtifactRegistry:
         self.loads = 0                       # engine builds (incl. reloads)
         self.hits = 0                        # get_engine served from memory
         self.eviction_count = 0
+        self.quarantine_count = 0
 
     def add_evict_listener(self, fn) -> None:
         """``fn(digest)`` fires after an engine eviction, OUTSIDE the
@@ -120,12 +175,13 @@ class ArtifactRegistry:
         ``save`` writes exactly ``to_bytes()``, so hashing the file bytes
         yields the same digest ``artifact.digest()`` would — content
         addressing straight off the filesystem.
+
+        The file is structurally validated first (zip CRC + header): a
+        corrupt or truncated artifact raises ``ArtifactCorrupt`` and is
+        never indexed — a bad file must not acquire an identity.
         """
-        h = hashlib.sha256()
-        with open(path, "rb") as f:
-            for block in iter(lambda: f.read(1 << 20), b""):
-                h.update(block)
-        digest = h.hexdigest()
+        digest = _hash_file(path)
+        _validate_npz(path, digest)
         with self._lock:
             entry = self._entries.get(digest)
             if entry is None:
@@ -207,10 +263,19 @@ class ArtifactRegistry:
 
         The build happens under the ENTRY lock, not the registry lock, so
         warming one cold model never stalls lookups of hot ones.
+
+        Raises ``ArtifactCorrupt`` (fail-fast, no disk retry) for a
+        quarantined entry, and quarantines on the spot if the reload
+        finds the file's hash no longer matches the registered digest.
         """
         with self._lock:
             digest = self.resolve(ref)
             entry = self._entries[digest]
+            if entry.quarantined is not None:
+                raise ArtifactCorrupt(
+                    f"model {digest[:12]} is quarantined: {entry.quarantined}",
+                    digest=digest, path=entry.path,
+                )
             entry.tick = next(self._clock)
             engine = entry.engine
         if engine is not None:
@@ -225,7 +290,7 @@ class ArtifactRegistry:
                         raise RuntimeError(
                             f"entry {digest[:12]} has no artifact and no path"
                         )
-                    artifact = CompiledArtifact.load(entry.path)
+                    artifact = self._load_verified(entry)
                 engine = SVMEngine(artifact, entry.exact, **self.engine_opts)
                 if self.warmup_on_load:
                     engine.warmup()
@@ -236,6 +301,43 @@ class ArtifactRegistry:
                     self.loads += 1
         self._evict_to_budget(keep=digest)
         return digest, engine
+
+    def _quarantine(self, entry: RegistryEntry, reason: str) -> None:
+        with self._lock:
+            if entry.quarantined is None:
+                entry.quarantined = reason
+                self.quarantine_count += 1
+
+    def _load_verified(self, entry: RegistryEntry) -> CompiledArtifact:
+        """(Re)load ``entry.path`` with identity verification.
+
+        Every path load — first lazy load AND reload-after-evict —
+        re-hashes the file: content addressing means the digest is not
+        provenance metadata but the entry's NAME, so a file whose bytes
+        changed on disk simply is not this model anymore. Mismatch or an
+        unparseable file quarantines the entry (fail fast on the next
+        resolve, no retry loop against a bad disk).
+        """
+        if self.faults is not None:
+            # transient injected load failure: raises InjectedFault and
+            # deliberately does NOT quarantine — the next resolve retries
+            self.faults.check(REGISTRY_LOAD)
+        actual = _hash_file(entry.path)
+        if actual != entry.digest:
+            reason = (f"file hash {actual[:12]} != registered digest "
+                      f"{entry.digest[:12]} (mutated on disk)")
+            self._quarantine(entry, reason)
+            raise ArtifactCorrupt(
+                f"{entry.path}: {reason}", digest=entry.digest, path=entry.path
+            )
+        try:
+            return CompiledArtifact.load(entry.path)
+        except Exception as e:
+            reason = f"unparseable artifact file: {e}"
+            self._quarantine(entry, reason)
+            raise ArtifactCorrupt(
+                f"{entry.path}: {reason}", digest=entry.digest, path=entry.path
+            ) from e
 
     def loaded_bytes(self) -> int:
         with self._lock:
@@ -287,5 +389,6 @@ class ArtifactRegistry:
                 "loads": self.loads,
                 "hits": self.hits,
                 "evictions": self.eviction_count,
+                "quarantined": self.quarantine_count,
                 "aliases": dict(self._aliases),
             }

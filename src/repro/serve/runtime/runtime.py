@@ -19,6 +19,28 @@ batch, nothing is torn.
 ``predict`` is the synchronous convenience (submit + materialize), and
 ``stats()`` exports the whole telemetry tree: per-model scheduler +
 engine counters, plus the registry's load/eviction/alias state.
+
+Robustness knobs (all per-runtime, applied to every model's batcher):
+
+  * ``max_queue_rows`` — admission bound per model; a submit that would
+    overflow the queue raises ``RuntimeOverloaded(retry_after_s=...)``
+    instead of queueing unboundedly (bounded queue ⇒ bounded latency
+    for everything that IS admitted).
+  * ``default_deadline_s`` / ``submit(..., deadline_s=...)`` — per-
+    request deadline; an admitted request that cannot reach a flush in
+    time fails its future with ``DeadlineExceeded``.
+  * ``breaker`` — per-model circuit breaker config (``True`` default,
+    ``False`` off, or a kwargs dict for ``CircuitBreaker``). While open,
+    traffic degrades to the exact streaming ``rbf_pred`` path when the
+    model was published with ``exact=``, or is shed otherwise.
+  * ``fault_injector`` — one ``FaultInjector`` threaded through both
+    the batchers (``engine_step`` site) and the registry
+    (``registry_load`` site) for deterministic chaos testing.
+
+Traffic listeners (``add_traffic_listener``) observe every submitted
+batch — the hook the ``DriftGuard`` reservoir-samples from to get a
+recompile dataset that reflects CURRENT traffic, not compile-time
+assumptions.
 """
 
 from __future__ import annotations
@@ -28,12 +50,10 @@ import threading
 import numpy as np
 
 from repro.core.families import CompiledArtifact
+from repro.serve.runtime.errors import BatcherClosed
+from repro.serve.runtime.faults import FaultInjector
 from repro.serve.runtime.registry import ArtifactRegistry
-from repro.serve.runtime.scheduler import (
-    DEFAULT_MAX_WAIT_US,
-    BatcherClosed,
-    MicroBatcher,
-)
+from repro.serve.runtime.scheduler import DEFAULT_MAX_WAIT_US, MicroBatcher
 from repro.serve.runtime.telemetry import ModelTelemetry
 
 
@@ -47,18 +67,28 @@ class Runtime:
         memory_budget_bytes: int | None = None,
         warmup_on_load: bool = True,
         engine_opts: dict | None = None,
+        max_queue_rows: int | None = None,
+        default_deadline_s: float | None = None,
+        breaker=True,
+        fault_injector: FaultInjector | None = None,
     ):
         if registry is None:
             registry = ArtifactRegistry(
                 memory_budget_bytes=memory_budget_bytes,
                 warmup_on_load=warmup_on_load,
                 engine_opts=engine_opts,
+                fault_injector=fault_injector,
             )
         self.registry = registry
         self.max_wait_us = max_wait_us
         self.flush_rows = flush_rows
+        self.max_queue_rows = max_queue_rows
+        self.default_deadline_s = default_deadline_s
+        self.breaker = breaker
+        self.faults = fault_injector
         self._batchers: dict[str, MicroBatcher] = {}
         self._telemetry: dict[str, ModelTelemetry] = {}
+        self._traffic_listeners: list = []
         self._lock = threading.Lock()
         self._closed = False
         # an idle batcher pins its engine; retire it on eviction so the
@@ -103,6 +133,9 @@ class Runtime:
                     flush_rows=self.flush_rows,
                     telemetry=tel,
                     name=digest[:12],
+                    max_queue_rows=self.max_queue_rows,
+                    breaker=self.breaker,
+                    fault_injector=self.faults,
                 )
                 self._batchers[digest] = b
         if stale is not None:
@@ -111,22 +144,42 @@ class Runtime:
 
     def _on_evict(self, digest: str) -> None:
         """Registry evicted ``digest``'s engine: retire its batcher (the
-        close drains in-flight work on the old engine first)."""
+        close drains in-flight work on the old engine first, and resolves
+        every still-pending future — eviction never strands a caller)."""
         with self._lock:
             b = self._batchers.pop(digest, None)
         if b is not None:
             b.close()
 
-    def submit(self, model: str, Z):
-        """Async scoring: ``Future[SliceResult]`` for ``Z`` on ``model``."""
+    def add_traffic_listener(self, fn) -> None:
+        """``fn(model_ref, digest, Z)`` observes every submitted batch
+        AFTER admission (shed requests are not traffic). Listener errors
+        propagate to the submitter — keep listeners trivial (the
+        ``DriftGuard`` reservoir offer is an O(rows) numpy copy)."""
+        self._traffic_listeners.append(fn)
+
+    def submit(self, model: str, Z, *, deadline_s: float | None = None):
+        """Async scoring: ``Future[SliceResult]`` for ``Z`` on ``model``.
+
+        Raises ``RuntimeOverloaded`` when admission sheds, and the
+        future fails with ``DeadlineExceeded`` when ``deadline_s`` (or
+        the runtime's ``default_deadline_s``) expires before service.
+        """
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
         while True:
             digest, engine = self.registry.get_engine(model)
             try:
-                return self._batcher(digest, engine).submit(Z)
+                fut = self._batcher(digest, engine).submit(
+                    Z, deadline_s=deadline_s
+                )
             except BatcherClosed:
                 # the batcher was retired between lookup and submit (engine
                 # evicted + reloaded under us); re-resolve onto the fresh one
                 continue
+            for fn in self._traffic_listeners:
+                fn(model, digest, Z)
+            return fut
 
     def predict(self, model: str, Z) -> tuple[np.ndarray, np.ndarray]:
         """Synchronous convenience: (values, valid) like ``SVMEngine.predict``."""
@@ -141,6 +194,14 @@ class Runtime:
         return engine.jit_cache_size()
 
     # ------------------------------------------------------------- telemetry
+
+    def telemetry(self, model: str) -> ModelTelemetry:
+        """The live ``ModelTelemetry`` for ``model``'s current digest
+        (created if the model has not served yet) — what ``DriftGuard``
+        reads its fallback window from and records canary verdicts on."""
+        digest = self.registry.resolve(model)
+        with self._lock:
+            return self._telemetry.setdefault(digest, ModelTelemetry())
 
     def stats(self, model: str | None = None) -> dict:
         """Telemetry snapshot: one model's, or the whole runtime tree."""
@@ -157,9 +218,12 @@ class Runtime:
                 tel = ModelTelemetry()            # zeroed snapshot pre-traffic
             out = tel.snapshot(engine)
             out["digest"] = digest
+            if batcher is not None and batcher.breaker is not None:
+                out["breaker"]["config"] = batcher.breaker.snapshot()
             entry = self.registry._entries.get(digest)
             if entry is not None:
                 out["evictions"] = entry.evictions
+                out["quarantined"] = entry.quarantined
             return out
         with self._lock:
             digests = list(self._telemetry)
@@ -171,6 +235,10 @@ class Runtime:
     # -------------------------------------------------------------- lifetime
 
     def close(self) -> None:
+        """Shut down every batcher; EVERY pending future resolves (with
+        its result if the final flush served it, ``BatcherClosed`` if
+        not) and every worker thread is joined — no caller blocked on
+        ``future.result()`` survives a close un-woken."""
         with self._lock:
             self._closed = True
             batchers = list(self._batchers.values())

@@ -17,6 +17,37 @@ Scheduling is queue + deadline, the classic micro-batching rule:
     idle model therefore sees at most ``max_wait_us`` of added latency,
     and heavy traffic never waits at all (the bucket fills first).
 
+Robustness layer (overload, faults, graceful degradation):
+
+  * **admission control** — ``max_queue_rows`` bounds the queue: a
+    submit that would grow the queue past the bound is SHED with a
+    typed ``RuntimeOverloaded`` carrying ``retry_after_s`` (estimated
+    from the measured per-step service time), instead of queueing
+    unboundedly. The queue is a shock absorber, not a reservoir: under
+    sustained overload, bounded depth means bounded latency for every
+    request that IS admitted.
+  * **per-submit deadlines** — ``submit(Z, deadline_s=...)`` fails the
+    future with ``DeadlineExceeded`` if the request cannot reach a
+    flush in time (checked both while queued and again at flush
+    assembly, so a slow engine step ahead of it cannot sneak an expired
+    request into a batch).
+  * **SLO-aware wait tightening** — under queue pressure the effective
+    ``max_wait_us`` shrinks proportionally to queue fullness (floored
+    at 10%): a loaded batcher stops trading latency for coalescing it
+    is already getting for free.
+  * **fault isolation** — an exception from the engine step fails ONLY
+    that batch's futures; the flush worker survives and keeps serving.
+    Repeated consecutive failures trip a per-model ``CircuitBreaker``:
+    while open, traffic degrades to the exact streaming ``rbf_pred``
+    path (``engine.submit_exact``) if an exact model was published, or
+    is shed with ``RuntimeOverloaded`` if not. After ``reset_after_s``
+    the breaker half-opens and sends ONE probe batch down the fast
+    path: success closes it, failure re-opens it.
+  * **no hung futures** — ``close()`` flushes what it can and resolves
+    anything left with ``BatcherClosed``; a crashed worker resolves the
+    queue exceptionally on the way out. Every admitted future
+    terminates, exactly once.
+
 Everything the engine guarantees survives coalescing:
 
   * **zero steady-state recompiles** — the concatenated rows go through
@@ -43,14 +74,93 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.serve.runtime.errors import (
+    BatcherClosed,
+    DeadlineExceeded,
+    RuntimeOverloaded,
+)
+from repro.serve.runtime.faults import ENGINE_STEP, FaultInjector
 from repro.serve.runtime.telemetry import ModelTelemetry
 
 DEFAULT_MAX_WAIT_US = 200.0
 
+# SLO tightening floor: a fully-pressured queue still waits 10% of
+# max_wait_us (zero would busy-spin the flush thread on a trickle).
+MIN_WAIT_FRACTION = 0.1
 
-class BatcherClosed(RuntimeError):
-    """Raised by ``submit`` on a closed batcher (e.g. retired after an
-    engine reload); ``Runtime`` re-resolves and retries on a fresh one."""
+# A flush counts as "tightened" in telemetry only when pressure cut the
+# wait by more than 10% — any non-empty queue shortens it a little, and
+# counting that would make the counter fire on every deadline flush.
+TIGHTENED_BELOW = 0.9
+
+
+class CircuitBreaker:
+    """Per-model circuit over the engine fast path.
+
+    closed --[``fail_threshold`` consecutive step failures]--> open
+    open   --[``reset_after_s`` elapsed]--> half_open (one probe batch)
+    half_open --[probe succeeds]--> closed / --[probe fails]--> open
+
+    Driven entirely by the single flush thread (no internal lock);
+    ``state`` reads from other threads are single attribute loads.
+    """
+
+    def __init__(self, *, fail_threshold: int = 3, reset_after_s: float = 0.25,
+                 clock=time.monotonic):
+        if fail_threshold < 1:
+            raise ValueError("fail_threshold must be >= 1")
+        self.fail_threshold = int(fail_threshold)
+        self.reset_after_s = float(reset_after_s)
+        self._clock = clock
+        self.state = "closed"
+        self.consecutive_failures = 0
+        self._opened_at = 0.0
+
+    def allow_fast(self) -> bool:
+        """May the next batch use the fast path? Transitions open →
+        half_open when the probe window arrives (that batch IS the probe)."""
+        if self.state == "open":
+            if self._clock() - self._opened_at >= self.reset_after_s:
+                self.state = "half_open"
+                return True
+            return False
+        return True                     # closed, or half_open (another probe)
+
+    def record_success(self) -> None:
+        self.consecutive_failures = 0
+        self.state = "closed"
+
+    def record_failure(self) -> None:
+        self.consecutive_failures += 1
+        if self.state == "half_open" or \
+                self.consecutive_failures >= self.fail_threshold:
+            self.state = "open"
+            self._opened_at = self._clock()
+
+    def retry_after(self) -> float:
+        """Time until the breaker would next admit a probe (0 if not open)."""
+        if self.state != "open":
+            return 0.0
+        return max(0.0, self.reset_after_s - (self._clock() - self._opened_at))
+
+    def snapshot(self) -> dict:
+        return {
+            "state": self.state,
+            "consecutive_failures": self.consecutive_failures,
+            "fail_threshold": self.fail_threshold,
+            "reset_after_s": self.reset_after_s,
+        }
+
+
+def _resolve_breaker(breaker) -> CircuitBreaker | None:
+    """True → default breaker; dict → kwargs; instance → itself; falsy → off."""
+    if breaker is True:
+        return CircuitBreaker()
+    if isinstance(breaker, dict):
+        return CircuitBreaker(**breaker)
+    if isinstance(breaker, CircuitBreaker) or breaker is None or breaker is False:
+        return breaker or None
+    raise TypeError(f"breaker must be bool, dict or CircuitBreaker, got {breaker!r}")
 
 
 class _EmptyResult:
@@ -71,12 +181,14 @@ class _EmptyResult:
 
 
 class _Pending:
-    __slots__ = ("Z", "future", "t_enqueue")
+    __slots__ = ("Z", "future", "t_enqueue", "deadline")
 
-    def __init__(self, Z: np.ndarray, future: Future, t_enqueue: float):
+    def __init__(self, Z: np.ndarray, future: Future, t_enqueue: float,
+                 deadline: float | None = None):
         self.Z = Z
         self.future = future
         self.t_enqueue = t_enqueue
+        self.deadline = deadline          # absolute perf_counter time, or None
 
 
 class MicroBatcher:
@@ -86,6 +198,15 @@ class MicroBatcher:
     the coalesced engine step is ENQUEUED on the device (deferred sync);
     materializing the result's ``.values`` / ``.labels`` / ``.valid``
     performs the one host transfer, shared with every sibling request.
+
+    Robustness knobs (all optional; defaults preserve PR-4 behavior
+    except the breaker, which is on and inert until steps actually fail):
+
+      * ``max_queue_rows`` — admission bound; ``None`` = unbounded.
+      * ``breaker`` — ``True`` (default config), ``False``/``None``
+        (off), a kwargs dict, or a ``CircuitBreaker``.
+      * ``fault_injector`` — a ``faults.FaultInjector`` consulted at the
+        ``engine_step`` site before every fast-path flush (chaos tests).
     """
 
     def __init__(
@@ -96,6 +217,9 @@ class MicroBatcher:
         flush_rows: int | None = None,
         telemetry: ModelTelemetry | None = None,
         name: str = "model",
+        max_queue_rows: int | None = None,
+        breaker=True,
+        fault_injector: FaultInjector | None = None,
     ):
         if flush_rows is None:
             flush_rows = engine.min_bucket
@@ -103,11 +227,21 @@ class MicroBatcher:
             raise ValueError(
                 f"flush_rows must be in [1, {engine.max_batch}], got {flush_rows}"
             )
+        if max_queue_rows is not None and max_queue_rows < flush_rows:
+            raise ValueError(
+                f"max_queue_rows ({max_queue_rows}) must be >= flush_rows "
+                f"({flush_rows}) or admission would starve every flush"
+            )
         self.engine = engine
         self.max_wait_s = max_wait_us * 1e-6
         self.flush_rows = flush_rows
+        self.max_queue_rows = max_queue_rows
         self.telemetry = telemetry if telemetry is not None else ModelTelemetry()
         self.name = name
+        self.breaker = _resolve_breaker(breaker)
+        self.faults = fault_injector
+        self._last_breaker_state = "closed"
+        self._step_time_s = self.max_wait_s or 1e-4   # EWMA of measured steps
         self._queue: collections.deque[_Pending] = collections.deque()
         self._queued_rows = 0
         self._cond = threading.Condition()
@@ -119,8 +253,15 @@ class MicroBatcher:
 
     # ---------------------------------------------------------------- client
 
-    def submit(self, Z) -> Future:
-        """Enqueue one request; returns a future of its ``SliceResult``."""
+    def submit(self, Z, *, deadline_s: float | None = None) -> Future:
+        """Enqueue one request; returns a future of its ``SliceResult``.
+
+        Raises ``RuntimeOverloaded`` (typed, with ``retry_after_s``) when
+        the bounded queue is full, ``BatcherClosed`` after ``close()``.
+        With ``deadline_s`` the future fails with ``DeadlineExceeded``
+        if the request cannot be flushed within that many seconds of
+        submission.
+        """
         Z = np.asarray(Z, dtype=np.float32)
         if Z.ndim == 1:
             Z = Z[None, :]
@@ -128,6 +269,8 @@ class MicroBatcher:
             raise ValueError(
                 f"expected (n, {self.engine.d}) batch, got {Z.shape}"
             )
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got {deadline_s}")
         fut: Future = Future()
         if Z.shape[0] == 0:                       # nothing to coalesce
             with self._cond:
@@ -135,15 +278,36 @@ class MicroBatcher:
                     raise BatcherClosed(f"MicroBatcher({self.name!r}) is closed")
             fut.set_result(_EmptyResult(self.engine))
             return fut
-        item = _Pending(Z, fut, time.perf_counter())
+        now = time.perf_counter()
+        item = _Pending(Z, fut, now,
+                        None if deadline_s is None else now + deadline_s)
         with self._cond:
             if self._closed:
                 raise BatcherClosed(f"MicroBatcher({self.name!r}) is closed")
+            rows = Z.shape[0]
+            if (self.max_queue_rows is not None
+                    and self._queued_rows > 0
+                    and self._queued_rows + rows > self.max_queue_rows):
+                # shed BEFORE enqueueing (the queue is the bound); an
+                # empty queue always admits so a single request larger
+                # than the bound is still servable (the engine chunks it)
+                self.telemetry.record_shed(rows)
+                raise RuntimeOverloaded(
+                    f"model {self.name!r}: queue full "
+                    f"({self._queued_rows}/{self.max_queue_rows} rows)",
+                    retry_after_s=self._retry_after_locked(),
+                )
             self._queue.append(item)
-            self._queued_rows += Z.shape[0]
-            self.telemetry.record_enqueue(Z.shape[0])
+            self._queued_rows += rows
+            self.telemetry.record_enqueue(rows)
             self._cond.notify()
         return fut
+
+    def _retry_after_locked(self) -> float:
+        """Expected time for the current queue to drain: queued flushes ×
+        the EWMA of measured step time (+ one flush wait)."""
+        flushes = max(1.0, self._queued_rows / self.flush_rows)
+        return flushes * self._step_time_s + self.max_wait_s
 
     def flush(self) -> None:
         """Drain the queue synchronously (tests, shutdown)."""
@@ -153,7 +317,14 @@ class MicroBatcher:
             self._execute(batch, deadline=False)
 
     def close(self) -> None:
-        """Stop the flush thread; pending requests are flushed first."""
+        """Stop the flush thread; every pending future RESOLVES.
+
+        Requests already queued are flushed (served or failed by the
+        engine's verdict); anything left after the worker exits — e.g. a
+        worker that died, or raced past the drain — is failed with
+        ``BatcherClosed``. A caller blocked on ``future.result()`` is
+        never left hanging.
+        """
         with self._cond:
             if self._closed:
                 return
@@ -161,6 +332,10 @@ class MicroBatcher:
             self._cond.notify_all()
         self._worker.join(timeout=5.0)
         self.flush()                               # anything enqueued at the wire
+        with self._cond:                           # belt and braces: no future
+            leftovers = self._drain_locked()       # survives close unresolved
+        self._fail_batch(leftovers,
+                         BatcherClosed(f"MicroBatcher({self.name!r}) is closed"))
 
     def __enter__(self):
         return self
@@ -176,56 +351,208 @@ class MicroBatcher:
         self._queued_rows = 0
         return batch
 
-    def _run(self) -> None:
-        while True:
-            with self._cond:
-                while not self._queue and not self._closed:
-                    self._cond.wait()
-                if self._closed:
-                    batch = self._drain_locked()
-                    deadline_hit = False
-                elif self._queued_rows >= self.flush_rows:
-                    batch, deadline_hit = self._drain_locked(), False
-                else:
-                    oldest = self._queue[0].t_enqueue
-                    remaining = oldest + self.max_wait_s - time.perf_counter()
-                    if remaining > 0:
-                        self._cond.wait(timeout=remaining)
-                        continue                   # re-evaluate both conditions
-                    batch, deadline_hit = self._drain_locked(), True
-            if batch:
-                self._execute(batch, deadline=deadline_hit)
-            if self._closed and not batch:
-                return
+    def _pop_expired_locked(self, now: float) -> list[_Pending]:
+        """Remove queued items whose deadline has passed; returns them."""
+        if not any(p.deadline is not None for p in self._queue):
+            return []
+        live, expired = [], []
+        for p in self._queue:
+            (expired if p.deadline is not None and now >= p.deadline
+             else live).append(p)
+        if expired:
+            self._queue = collections.deque(live)
+            self._queued_rows = sum(p.Z.shape[0] for p in live)
+        return expired
 
-    def _execute(self, batch: list[_Pending], *, deadline: bool) -> None:
+    def _effective_wait_locked(self) -> float:
+        """``max_wait_s`` tightened by queue pressure (SLO-aware): a
+        batcher at 60% of its admission bound only waits 40% as long."""
+        if self.max_queue_rows is None:
+            return self.max_wait_s
+        pressure = self._queued_rows / self.max_queue_rows
+        return self.max_wait_s * min(1.0, max(MIN_WAIT_FRACTION, 1.0 - pressure))
+
+    def _run(self) -> None:
+        try:
+            while True:
+                expired = None
+                with self._cond:
+                    while not self._queue and not self._closed:
+                        self._cond.wait()
+                    if self._closed:
+                        batch, deadline_hit, tightened = \
+                            self._drain_locked(), False, False
+                    elif self._queued_rows >= self.flush_rows:
+                        batch, deadline_hit, tightened = \
+                            self._drain_locked(), False, False
+                    else:
+                        now = time.perf_counter()
+                        expired = self._pop_expired_locked(now)
+                        batch = None
+                        if not expired:
+                            wait_s = self._effective_wait_locked()
+                            wake = self._queue[0].t_enqueue + wait_s
+                            dls = [p.deadline for p in self._queue
+                                   if p.deadline is not None]
+                            if dls:
+                                wake = min(wake, min(dls))
+                            remaining = wake - now
+                            if remaining > 0:
+                                self._cond.wait(timeout=remaining)
+                                continue                   # re-evaluate
+                            batch, deadline_hit = self._drain_locked(), True
+                            tightened = wait_s < self.max_wait_s * TIGHTENED_BELOW
+                if expired:
+                    self._fail_expired(expired)
+                    continue
+                if batch:
+                    self._execute(batch, deadline=deadline_hit,
+                                  tightened=tightened)
+                if self._closed and not batch:
+                    return
+        finally:
+            # the worker exits via close() or a crash; either way nothing
+            # may be left in the queue to hang a caller forever
+            with self._cond:
+                self._closed = True
+                leftovers = self._drain_locked()
+            self._fail_batch(
+                leftovers,
+                BatcherClosed(f"MicroBatcher({self.name!r}) worker exited"),
+            )
+
+    # -------------------------------------------------------------- execution
+
+    def _fail_batch(self, batch: list[_Pending], exc: BaseException) -> None:
+        for p in batch:
+            # a client may have cancelled while queued; a cancelled future
+            # must not take the whole flush worker down with it
+            if p.future.set_running_or_notify_cancel():
+                p.future.set_exception(exc)
+
+    def _fail_expired(self, expired: list[_Pending]) -> None:
+        rows = sum(p.Z.shape[0] for p in expired)
+        self.telemetry.record_deadline_timeout(len(expired), rows)
+        self._fail_batch(expired, DeadlineExceeded(
+            f"model {self.name!r}: {len(expired)} request(s) expired "
+            f"before a flush could serve them"
+        ))
+
+    def _sync_breaker_telemetry(self) -> None:
+        st = self.breaker.state
+        if st != self._last_breaker_state:
+            self.telemetry.record_breaker_state(
+                st,
+                tripped=(st == "open"),
+                probe=(st == "half_open"),
+            )
+            self._last_breaker_state = st
+
+    def _execute(self, batch: list[_Pending], *, deadline: bool,
+                 tightened: bool = False) -> None:
+        # re-check deadlines at flush assembly: a slow step ahead of this
+        # batch may have burned the queue time an expired item had left
+        now = time.perf_counter()
+        live, expired = [], []
+        for p in batch:
+            (expired if p.deadline is not None and now >= p.deadline
+             else live).append(p)
+        if expired:
+            self._fail_expired(expired)
+        batch = live
+        if not batch:
+            return
         sizes = [p.Z.shape[0] for p in batch]
         rows = int(sum(sizes))
+
+        if self.breaker is not None and not self.breaker.allow_fast():
+            self._sync_breaker_telemetry()
+            self._execute_degraded(batch, sizes, rows,
+                                   deadline=deadline, tightened=tightened)
+            return
+        if self.breaker is not None:
+            self._sync_breaker_telemetry()        # open -> half_open probe
+
+        t0 = time.perf_counter()
         try:
+            if self.faults is not None:
+                self.faults.check(ENGINE_STEP)
             Z = np.concatenate([p.Z for p in batch], axis=0)
             result = self.engine.submit(Z)
             # e2e latency closes when the SHARED result first materializes
             # (one sample per coalesced request, recorded by whichever
-            # client thread syncs first).
+            # client thread syncs first); per-row validity feeds the
+            # drift window the DriftGuard watches.
             enqueued = [p.t_enqueue for p in batch]
             telemetry = self.telemetry
 
-            def _on_materialize(ts=enqueued, tel=telemetry):
-                done = time.perf_counter()
-                for t0 in ts:
-                    tel.record_latency(done - t0)
+            def _on_materialize(done, ts=enqueued, tel=telemetry, n=rows):
+                t_done = time.perf_counter()
+                for t_enq in ts:
+                    tel.record_latency(t_done - t_enq)
+                valid = np.asarray(done[1])
+                tel.record_validity(n, int(n - int(valid.sum())))
 
             result.on_materialize = _on_materialize
             slices = result.split(sizes)
         except BaseException as e:                 # scatter the failure too
-            self.telemetry.record_flush(len(batch), rows, deadline=deadline)
-            for p in batch:
-                if p.future.set_running_or_notify_cancel():
-                    p.future.set_exception(e)
+            self.telemetry.record_flush(len(batch), rows, deadline=deadline,
+                                        tightened=tightened)
+            self.telemetry.record_batch_failure(len(batch), rows)
+            if self.breaker is not None:
+                self.breaker.record_failure()
+                self._sync_breaker_telemetry()
+            self._fail_batch(batch, e)
             return
-        self.telemetry.record_flush(len(batch), rows, deadline=deadline)
+        if self.breaker is not None:
+            self.breaker.record_success()
+            self._sync_breaker_telemetry()
+        # EWMA of step enqueue time feeds the retry_after_s estimate
+        self._step_time_s = 0.8 * self._step_time_s + \
+            0.2 * (time.perf_counter() - t0)
+        self.telemetry.record_flush(len(batch), rows, deadline=deadline,
+                                    tightened=tightened)
         for p, s in zip(batch, slices):
-            # a client may have cancelled while queued; a cancelled future
-            # must not take the whole flush worker down with it
+            if p.future.set_running_or_notify_cancel():
+                p.future.set_result(s)
+
+    def _execute_degraded(self, batch: list[_Pending], sizes, rows: int, *,
+                          deadline: bool, tightened: bool) -> None:
+        """Breaker-open serving: exact ``rbf_pred`` path, or shed."""
+        if not getattr(self.engine, "exact_available", False):
+            self.telemetry.record_flush(len(batch), rows, deadline=deadline,
+                                        tightened=tightened)
+            self.telemetry.record_breaker_shed(len(batch))
+            self._fail_batch(batch, RuntimeOverloaded(
+                f"model {self.name!r}: circuit breaker open and no exact "
+                f"model published to degrade to",
+                retry_after_s=self.breaker.retry_after() or self.max_wait_s,
+            ))
+            return
+        try:
+            Z = np.concatenate([p.Z for p in batch], axis=0)
+            result = self.engine.submit_exact(Z)
+            enqueued = [p.t_enqueue for p in batch]
+            telemetry = self.telemetry
+
+            # latency only — degraded rows are exact-served and must NOT
+            # feed the drift window (a fault is not input drift)
+            def _on_materialize(done, ts=enqueued, tel=telemetry):
+                t_done = time.perf_counter()
+                for t_enq in ts:
+                    tel.record_latency(t_done - t_enq)
+
+            result.on_materialize = _on_materialize
+            slices = result.split(sizes)
+        except BaseException as e:
+            self.telemetry.record_flush(len(batch), rows, deadline=deadline,
+                                        tightened=tightened)
+            self.telemetry.record_batch_failure(len(batch), rows)
+            self._fail_batch(batch, e)
+            return
+        self.telemetry.record_flush(len(batch), rows, deadline=deadline,
+                                    tightened=tightened)
+        self.telemetry.record_degraded(len(batch), rows)
+        for p, s in zip(batch, slices):
             if p.future.set_running_or_notify_cancel():
                 p.future.set_result(s)

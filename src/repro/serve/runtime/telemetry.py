@@ -20,6 +20,30 @@ The exported snapshot answers the operational questions the ROADMAP's
   * **fallback rate / compile count** — straight from the engine's
     thread-safe stats (accuracy-contract violations, trace activity).
   * **evictions / loads** — registry-level counters (cold-model churn).
+
+Robustness counters (every failure mode the overload/fault/drift layer
+can produce is observable — nothing sheds or fails silently):
+
+  * **shed_requests / shed_rows** — rejected by admission control
+    (bounded queue) with ``RuntimeOverloaded``;
+  * **deadline_timeouts** — admitted requests failed with
+    ``DeadlineExceeded`` because their per-submit deadline expired
+    before a flush could include them;
+  * **batch_failures / failed_requests / failed_rows** — engine-step
+    exceptions scattered to exactly the affected batch's futures;
+  * **tightened_waits** — flushes whose ``max_wait_us`` was shortened
+    by queue pressure (the SLO-aware knob engaging);
+  * **breaker** — current circuit state plus trip/probe counters,
+    ``degraded_*`` accounting for batches served by the exact
+    ``rbf_pred`` path while the breaker holds the fast path open, and
+    ``breaker_shed_requests`` for open-breaker sheds when no exact
+    model was published;
+  * **canary / recompiles** — the ``DriftGuard`` self-healing loop's
+    verdicts (recompiles triggered, canaries passed/failed);
+  * **fallback_window** — a bounded window of recent per-row validity
+    (fast-path batches only), the drift signal ``DriftGuard`` watches:
+    the LIFETIME fallback rate of a long-lived model dilutes a sudden
+    input shift, the windowed rate does not.
 """
 
 from __future__ import annotations
@@ -30,6 +54,7 @@ import threading
 import numpy as np
 
 DEFAULT_WINDOW = 4096
+DEFAULT_VALIDITY_WINDOW = 256          # recent flushes tracked for drift
 
 
 class LatencyWindow:
@@ -61,7 +86,8 @@ class LatencyWindow:
 class ModelTelemetry:
     """Counters + latency window for one served model (one digest)."""
 
-    def __init__(self, window: int = DEFAULT_WINDOW):
+    def __init__(self, window: int = DEFAULT_WINDOW,
+                 validity_window: int = DEFAULT_VALIDITY_WINDOW):
         self.latency = LatencyWindow(window)
         self._lock = threading.Lock()
         self._requests = 0
@@ -70,6 +96,28 @@ class ModelTelemetry:
         self._deadline_flushes = 0        # flushed because max_wait_us expired
         self._queue_rows = 0              # rows currently pending
         self._max_queue_rows = 0
+        # -- admission / deadline / failure accounting
+        self._shed_requests = 0
+        self._shed_rows = 0
+        self._deadline_timeouts = 0
+        self._batch_failures = 0
+        self._failed_requests = 0
+        self._failed_rows = 0
+        self._tightened_waits = 0
+        # -- circuit breaker / degraded serving
+        self._breaker_state = "closed"
+        self._breaker_trips = 0
+        self._breaker_probes = 0
+        self._degraded_flushes = 0
+        self._degraded_requests = 0
+        self._degraded_rows = 0
+        self._breaker_shed_requests = 0
+        # -- self-healing loop
+        self._recompiles = 0
+        self._canary_pass = 0
+        self._canary_fail = 0
+        # -- drift signal: (rows, invalid_rows) per recent fast-path flush
+        self._validity = collections.deque(maxlen=validity_window)
 
     # ------------------------------------------------------------- recording
 
@@ -80,14 +128,91 @@ class ModelTelemetry:
             self._queue_rows += rows
             self._max_queue_rows = max(self._max_queue_rows, self._queue_rows)
 
-    def record_flush(self, requests: int, rows: int, *, deadline: bool) -> None:
+    def record_flush(self, requests: int, rows: int, *, deadline: bool,
+                     tightened: bool = False) -> None:
         with self._lock:
             self._flushes += 1
             self._deadline_flushes += int(deadline)
+            self._tightened_waits += int(tightened)
             self._queue_rows -= rows
 
     def record_latency(self, seconds: float) -> None:
         self.latency.record(seconds)
+
+    def record_shed(self, rows: int) -> None:
+        """Request rejected at admission (never entered the queue)."""
+        with self._lock:
+            self._shed_requests += 1
+            self._shed_rows += rows
+
+    def record_deadline_timeout(self, requests: int = 1, rows: int = 0) -> None:
+        """Admitted requests expired while queued (left without a flush)."""
+        with self._lock:
+            self._deadline_timeouts += requests
+            self._queue_rows -= rows
+
+    def record_batch_failure(self, requests: int, rows: int) -> None:
+        """One engine step failed; its futures got the exception."""
+        with self._lock:
+            self._batch_failures += 1
+            self._failed_requests += requests
+            self._failed_rows += rows
+
+    def record_breaker_state(self, state: str, *, tripped: bool = False,
+                             probe: bool = False) -> None:
+        with self._lock:
+            self._breaker_state = state
+            self._breaker_trips += int(tripped)
+            self._breaker_probes += int(probe)
+
+    def record_degraded(self, requests: int, rows: int) -> None:
+        """One flush served by the exact path under an open breaker."""
+        with self._lock:
+            self._degraded_flushes += 1
+            self._degraded_requests += requests
+            self._degraded_rows += rows
+
+    def record_breaker_shed(self, requests: int = 1) -> None:
+        with self._lock:
+            self._breaker_shed_requests += requests
+
+    def record_recompile(self) -> None:
+        with self._lock:
+            self._recompiles += 1
+
+    def record_canary(self, passed: bool) -> None:
+        with self._lock:
+            if passed:
+                self._canary_pass += 1
+            else:
+                self._canary_fail += 1
+
+    def record_validity(self, rows: int, invalid: int) -> None:
+        """Per-row validity of one FAST-PATH flush (drift window input).
+
+        Degraded (breaker-open) flushes must NOT be recorded here: their
+        rows are exact-served by construction and would read as 100%
+        fallback, turning an engine fault into a phantom drift signal.
+        """
+        if rows <= 0:
+            return
+        with self._lock:
+            self._validity.append((int(rows), int(invalid)))
+
+    def fallback_window(self) -> dict:
+        """Recent-traffic fallback rate — the ``DriftGuard`` signal."""
+        with self._lock:
+            rows = sum(r for r, _ in self._validity)
+            invalid = sum(i for _, i in self._validity)
+        return {
+            "rows": rows,
+            "invalid": invalid,
+            "rate": invalid / rows if rows else 0.0,
+        }
+
+    def reset_fallback_window(self) -> None:
+        with self._lock:
+            self._validity.clear()
 
     # -------------------------------------------------------------- exporting
 
@@ -104,7 +229,29 @@ class ModelTelemetry:
                     self._requests / max(1, self._flushes), 3
                 ),
                 "rows_per_flush": round(self._rows / max(1, self._flushes), 2),
+                "shed_requests": self._shed_requests,
+                "shed_rows": self._shed_rows,
+                "deadline_timeouts": self._deadline_timeouts,
+                "batch_failures": self._batch_failures,
+                "failed_requests": self._failed_requests,
+                "failed_rows": self._failed_rows,
+                "tightened_waits": self._tightened_waits,
+                "breaker": {
+                    "state": self._breaker_state,
+                    "trips": self._breaker_trips,
+                    "probes": self._breaker_probes,
+                    "degraded_flushes": self._degraded_flushes,
+                    "degraded_requests": self._degraded_requests,
+                    "degraded_rows": self._degraded_rows,
+                    "shed_requests": self._breaker_shed_requests,
+                },
+                "canary": {
+                    "recompiles": self._recompiles,
+                    "passed": self._canary_pass,
+                    "failed": self._canary_fail,
+                },
             }
+        out["fallback_window"] = self.fallback_window()
         out["latency"] = self.latency.snapshot()
         if engine is not None:
             eng = engine.stats.snapshot()

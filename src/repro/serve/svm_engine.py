@@ -111,6 +111,8 @@ class EngineStats:
     fallback_instances: int = 0
     compiled_steps: int = 0             # bucket variants traced (compile count)
     padded_instances: int = 0           # wasted rows from bucket padding
+    degraded_batches: int = 0           # submit_exact batches (breaker open)
+    degraded_instances: int = 0
     bucket_hits: dict = dataclasses.field(default_factory=dict)
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False
@@ -129,6 +131,14 @@ class EngineStats:
         with self._lock:
             self.fallback_instances += k
 
+    def record_degraded(self, n: int) -> None:
+        """One ``submit_exact`` batch of n rows (kept OUT of the fast-path
+        batch/instance counters so ``fallback_rate`` — drift's signal —
+        is not polluted by breaker-degraded traffic)."""
+        with self._lock:
+            self.degraded_batches += 1
+            self.degraded_instances += n
+
     def record_compile(self) -> None:
         with self._lock:
             self.compiled_steps += 1
@@ -144,6 +154,8 @@ class EngineStats:
                 "compiled_steps": self.compiled_steps,
                 "padded_instances": self.padded_instances,
                 "padding_overhead": self.padded_instances / max(1, self.instances),
+                "degraded_batches": self.degraded_batches,
+                "degraded_instances": self.degraded_instances,
                 "bucket_hits": dict(self.bucket_hits),
             }
 
@@ -185,7 +197,10 @@ class EngineResult:
             if self._done is None:
                 self._done = self._engine._finalize(self._Z, self._chunks)
                 if self.on_materialize is not None:
-                    self.on_materialize()
+                    # the hook receives the finalized (values, valid,
+                    # labels) so the scheduler can record per-row validity
+                    # (the drift window) along with the latency sample
+                    self.on_materialize(self._done)
         return self._done
 
     def split(self, sizes) -> list["SliceResult"]:
@@ -319,6 +334,26 @@ class SVMEngine:
         self._step = jax.jit(_step, donate_argnums=donate)
         self._slow = self._build_slow(exact, mesh) if exact is not None else None
 
+        # Degraded-mode step (circuit breaker open): the exact expansion
+        # through the streaming rbf_pred path, shaped like _step so the
+        # coalesced scatter machinery works unchanged. valid is all-False
+        # — the rows were served OUTSIDE the approximation contract's
+        # fast path, same semantics as fallback-patched rows.
+        if self._slow is not None:
+            slow = self._slow
+
+            def _slow_full(Zp):
+                scores = slow(Zp)                               # (m, K)
+                if self.multiclass:
+                    labels = jnp.argmax(scores, axis=-1)
+                else:
+                    labels = jnp.where(scores[:, 0] >= 0, 1, -1)
+                return scores, jnp.zeros((Zp.shape[0],), bool), labels
+
+            self._slow_step = jax.jit(_slow_full)
+        else:
+            self._slow_step = None
+
     # ---------------------------------------------------------- tile tuning
 
     def _resolve_tile_config(self, bucket: int) -> TileConfig:
@@ -367,6 +402,40 @@ class SVMEngine:
         # Z is only needed to re-score bound-violating rows; don't pin the
         # host copy of every deferred batch when no fallback can happen.
         return EngineResult(self, Z if self.allow_fallback else None, chunks)
+
+    @property
+    def exact_available(self) -> bool:
+        """True when an exact model was published (``submit_exact`` works)."""
+        return self._slow_step is not None
+
+    def submit_exact(self, Z) -> EngineResult:
+        """Score ``Z`` entirely through the exact streaming ``rbf_pred``
+        path — the circuit breaker's graceful-degradation target.
+
+        Same deferred-sync ``EngineResult`` surface as ``submit`` (the
+        micro-batcher's scatter works unchanged) with every row's
+        ``valid`` False: the rows were exact-served, not approximated.
+        Batches are bucket-padded like the fast path so degraded serving
+        keeps the bounded-compile property (one slow variant per bucket,
+        not per batch shape). Requires an exact model.
+        """
+        if self._slow_step is None:
+            raise RuntimeError("submit_exact needs an exact model (none given)")
+        Z = np.asarray(Z, dtype=np.float32)
+        if Z.ndim != 2 or Z.shape[1] != self.d:
+            raise ValueError(f"expected (n, {self.d}) batch, got {Z.shape}")
+        n = Z.shape[0]
+        chunks = []
+        for start in range(0, max(n, 1), self.max_batch):
+            rows = Z[start : start + self.max_batch]
+            m = rows.shape[0]
+            bkt = bucket_size(m, self.min_bucket, self.max_batch)
+            buf = np.zeros((bkt, self.d), dtype=np.float32)
+            buf[:m] = rows
+            out = self._slow_step(jnp.asarray(buf))
+            chunks.append((out, m))
+        self.stats.record_degraded(n)
+        return EngineResult(self, None, chunks)   # exact already: no re-score
 
     def predict(self, Z) -> tuple[np.ndarray, np.ndarray]:
         """Synchronous: (decision values, used_fast_path bool mask)."""
@@ -475,7 +544,7 @@ class SVMEngine:
         labels = np.concatenate([np.asarray(out[2])[:m] for out, m in chunks]) \
             if chunks else np.zeros((0,), np.int32)
 
-        if self.allow_fallback and not valid.all():
+        if Z is not None and self.allow_fallback and not valid.all():
             idx = np.nonzero(~valid)[0]
             self.stats.record_fallback(len(idx))
             exact_scores = np.asarray(self._slow(jnp.asarray(Z[idx])))  # (m, K)

@@ -11,7 +11,15 @@ is broken:
   * ``family_compare``: every family was measured at both dtypes, and
     quantization does not blow up the family's measured error;
   * ``runtime_throughput``: coalescing added ZERO steady-state
-    recompiles.
+    recompiles;
+  * ``overload``: the burst past capacity really shed (typed, with a
+    retry hint), the accounting balances (admitted + shed ==
+    submitted, client-side == telemetry-side), ZERO admitted futures
+    hung, the queue respected its bound, and the burst added zero
+    steady-state recompiles;
+  * ``degraded_mode``: the breaker was genuinely open during the
+    degraded measurement, every request was served (none shed), and
+    degraded serving added zero fast-path recompiles.
 
 Usage: ``python tools/check_bench_invariants.py [path-to-json]``
 Exits non-zero listing every violated invariant.
@@ -101,6 +109,90 @@ def check_runtime(payload: dict, problems: list[str]) -> None:
         )
 
 
+def check_overload(payload: dict, problems: list[str]) -> None:
+    section = payload.get("overload")
+    if not section or not section.get("meta"):
+        problems.append("overload: section missing or empty")
+        return
+    meta = section["meta"]
+    if meta.get("shed_requests", 0) <= 0:
+        problems.append(
+            f"overload: burst past capacity shed nothing "
+            f"(shed_requests == {meta.get('shed_requests')!r})"
+        )
+    elif meta.get("retry_after_s_min") is None or meta["retry_after_s_min"] <= 0:
+        problems.append(
+            f"overload: sheds carried no positive retry_after_s hint "
+            f"(min == {meta.get('retry_after_s_min')!r})"
+        )
+    if meta.get("shed_requests") != meta.get("shed_requests_telemetry"):
+        problems.append(
+            f"overload: client-side sheds {meta.get('shed_requests')!r} != "
+            f"telemetry sheds {meta.get('shed_requests_telemetry')!r}"
+        )
+    if meta.get("admitted", 0) + meta.get("shed_requests", 0) != meta.get("submitted"):
+        problems.append(
+            f"overload: accounting leak — admitted {meta.get('admitted')!r} "
+            f"+ shed {meta.get('shed_requests')!r} != "
+            f"submitted {meta.get('submitted')!r}"
+        )
+    if meta.get("hung_futures") != 0:
+        problems.append(
+            f"overload: {meta.get('hung_futures')!r} admitted future(s) "
+            f"never resolved"
+        )
+    if meta.get("queue_rows_after_drain") != 0:
+        problems.append(
+            f"overload: queue gauge {meta.get('queue_rows_after_drain')!r} "
+            f"rows after full drain, must be 0"
+        )
+    # the telemetry gauge keeps counting a popped batch until its flush
+    # is recorded, so the provable high-water is waiting rows (bounded
+    # by admission) plus the batch in execution: 2x the admission bound
+    bound = meta.get("max_queue_rows_bound")
+    if bound is not None and meta.get("max_queue_rows_observed", 0) > 2 * bound:
+        problems.append(
+            f"overload: queue high-water {meta.get('max_queue_rows_observed')!r} "
+            f"exceeded waiting + in-flight bound {2 * bound!r}"
+        )
+    if meta.get("steady_state_recompiles") != 0:
+        problems.append(
+            f"overload: steady_state_recompiles == "
+            f"{meta.get('steady_state_recompiles')!r}, must be 0"
+        )
+
+
+def check_degraded(payload: dict, problems: list[str]) -> None:
+    section = payload.get("degraded_mode")
+    if not section or not section.get("meta"):
+        problems.append("degraded_mode: section missing or empty")
+        return
+    meta = section["meta"]
+    if meta.get("breaker_state") != "open":
+        problems.append(
+            f"degraded_mode: breaker state {meta.get('breaker_state')!r} "
+            f"during the degraded measurement, must be 'open'"
+        )
+    if meta.get("breaker_trips", 0) < 1:
+        problems.append("degraded_mode: breaker never recorded a trip")
+    if meta.get("degraded_requests", 0) <= 0:
+        problems.append(
+            f"degraded_mode: no requests served degraded "
+            f"(degraded_requests == {meta.get('degraded_requests')!r})"
+        )
+    if meta.get("breaker_shed_requests") != 0:
+        problems.append(
+            f"degraded_mode: {meta.get('breaker_shed_requests')!r} requests "
+            f"shed despite an exact model being published"
+        )
+    if meta.get("steady_state_recompiles") != 0:
+        problems.append(
+            f"degraded_mode: degraded serving added "
+            f"{meta.get('steady_state_recompiles')!r} fast-path variants, "
+            f"must be 0"
+        )
+
+
 def main(argv: list[str]) -> int:
     path = argv[1] if len(argv) > 1 else DEFAULT_PATH
     with open(path) as f:
@@ -109,13 +201,16 @@ def main(argv: list[str]) -> int:
     check_model_size(payload, problems)
     check_family_compare(payload, problems)
     check_runtime(payload, problems)
+    check_overload(payload, problems)
+    check_degraded(payload, problems)
     if problems:
         print(f"[bench-invariants] {len(problems)} violation(s) in {path}:")
         for p in problems:
             print(f"  FAIL {p}")
         return 1
-    print(f"[bench-invariants] OK — model_size, family_compare and "
-          f"runtime_throughput invariants hold in {path}")
+    print(f"[bench-invariants] OK — model_size, family_compare, "
+          f"runtime_throughput, overload and degraded_mode invariants "
+          f"hold in {path}")
     return 0
 
 
