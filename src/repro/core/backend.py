@@ -185,6 +185,54 @@ def quadform_heads_q8(
     return quadform_heads_q8_xla(Z, M_q, col_scale, V, c, b, gamma, msq)
 
 
+def quadform_heads_sharded(
+    Z, M_all, V, c, b, gamma, msq, *, mesh, config: TileConfig | None = None
+):
+    """``quadform_heads`` with the K heads sharded over a device mesh.
+
+    The stacked Hessian (K, d, d) — the operand that busts one device's
+    memory in the extreme-multiclass regime — and every other per-head
+    array are partitioned over ``mesh``'s first axis; Z is replicated.
+    Each device runs the SAME fused per-shard primitive the single-
+    device path uses (one GEMM for its K/shards heads), so tuning and
+    backend choice apply per shard. Outputs stay head-sharded
+    (``P(None, axis)``): a consumer reducing over heads (the engine's
+    argmax) lets XLA insert the one cross-shard reduce at the end
+    instead of gathering (n, K) scores to every device.
+
+    K must divide evenly by the axis size — pad validity-neutral heads
+    first (``families.*.pad_heads``). Returns (scores (n, K),
+    valid (n, K)); ``z_sq`` is a per-shard by-product and is not
+    returned (the per-head validity mask already encodes it).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = mesh.axis_names[0]
+    shards = mesh.shape[axis]
+    k = M_all.shape[0]
+    if k % shards:
+        raise ValueError(
+            f"num_heads ({k}) must divide by mesh axis {axis!r} ({shards}); "
+            f"pad validity-neutral heads first"
+        )
+
+    def _local(Zb, Ms, Vs, cs, bs, gs, ms):
+        scores, _, valid = quadform_heads(
+            Zb, Ms, Vs, cs, bs, gs, ms, config=config
+        )
+        return scores, valid
+
+    fn = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(), P(axis, None, None), P(axis, None),
+                  P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(None, axis), P(None, axis)),
+    )
+    return fn(Z, M_all, V, c, b, gamma, msq)
+
+
 # ------------------------------------------------------------ rff scoring
 
 
@@ -220,6 +268,46 @@ def rff_score(Z, W, phase, weights, bias, *, config: TileConfig | None = None):
             Z, W, phase, weights, bias, config=config, interpret=_interpret()
         )
     return rff_score_xla(Z, W, phase, weights, bias)
+
+
+def rff_score_sharded(
+    Z, W, phase, weights, bias, *, mesh, config: TileConfig | None = None
+):
+    """``rff_score`` with the (K, F) readout sharded over a device mesh.
+
+    The projection (W, phase) is per-row work and stays replicated —
+    each device computes the (n, F) feature block for its shard of
+    heads; only the readout weights and bias partition over ``mesh``'s
+    first axis. That trades F·n duplicate flops per device for zero
+    cross-device traffic before the final head reduce, the right trade
+    whenever K·F (the readout) dominates F·d (the projection), i.e.
+    exactly the extreme-multiclass regime head sharding exists for.
+
+    K must divide evenly by the axis size (pad heads first). Returns
+    head-sharded scores (n, K), spec ``P(None, axis)``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = mesh.axis_names[0]
+    shards = mesh.shape[axis]
+    k = weights.shape[0]
+    if k % shards:
+        raise ValueError(
+            f"num_heads ({k}) must divide by mesh axis {axis!r} ({shards}); "
+            f"pad validity-neutral heads first"
+        )
+
+    def _local(Zb, Wf, ph, ws, bs):
+        return rff_score(Zb, Wf, ph, ws, bs, config=config)
+
+    fn = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(axis, None), P(axis)),
+        out_specs=P(None, axis),
+    )
+    return fn(Z, W, phase, weights, bias)
 
 
 def rff_score_q8_xla(Z, W_q, w_scale, phase, weights_q, wt_scale, bias):

@@ -48,6 +48,12 @@ ARTIFACT_FORMAT_VERSION = 2
 
 _HEADER_MEMBER = "__artifact__"
 
+# Bias given to validity-neutral padding heads (head-sharded serving
+# pads K up to the mesh axis size): exp-enveloped scores are O(|c|+|v|+|M|)
+# magnitudes, so a -1e30 bias can never win an argmax, and padding heads
+# carry msq = 0, which satisfies Eq 3.11 for every row.
+PAD_HEAD_BIAS = -1e30
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class CompiledArtifact:

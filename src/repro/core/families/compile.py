@@ -75,6 +75,7 @@ def compile_model(
     seed: int = 0,
     family_opts: dict | None = None,
     timing_repeats: int = 5,
+    cost_margin: float | None = 4.0,
 ) -> CompiledArtifact:
     """Compile ``svm`` under every candidate (family, dtype); return the
     fastest artifact meeting ``budget`` on the verification sample.
@@ -93,9 +94,21 @@ def compile_model(
     Raises ``ValueError`` listing every measured error when no candidate
     fits the budget — the caller's recourse is a bigger fourier basis, a
     looser budget, or serving the exact model.
+
+    ``cost_margin`` enables analytic cost PRE-pruning: once some measured
+    candidate meets the budget, a later candidate whose roofline-predicted
+    cost (``repro.launch.roofline.family_candidate_seconds``) exceeds
+    ``cost_margin`` x the predicted cost of the best budget-meeting
+    candidate so far is skipped without compiling or timing it. Predicted
+    costs are compared only to OTHER predicted costs (never to measured
+    milliseconds — the prior's absolute scale is hardware-fantasy, its
+    RANKING is what's trusted), pruning never fires before a real
+    candidate exists, and candidates the prior cannot model are always
+    measured. ``cost_margin=None`` disables pruning (exhaustive search).
     """
     from repro.core import families as _families
     from repro.core.families import quantize
+    from repro.launch import roofline
 
     names = families or tuple(_families.FAMILIES)
     for dt in dtypes:
@@ -106,16 +119,37 @@ def compile_model(
         sample = _families.fourier.holdout_sample(svm, seed, sample_n)
     Z = jnp.asarray(np.asarray(sample, np.float32))
 
-    ay2, b, _, _ = stack_heads(svm)
+    ay2, b, k_heads, _ = stack_heads(svm)
     exact = rbf_kernel(Z, svm.X, svm.gamma) @ ay2.T + b[None, :]   # (n, K)
     exact_scale = float(jnp.mean(jnp.abs(exact)))
     limit = budget.limit(exact_scale)
 
-    report = []
+    n_sample, d_in = int(Z.shape[0]), int(Z.shape[1])
+    best_predicted: float | None = None   # cheapest predicted cost among
+    report = []                           # budget-meeting MEASURED candidates
     candidates: list[tuple[float, CompiledArtifact]] = []
     for name in names:
         fam = _families.get_family(name)
         for dt in dtypes:
+            predicted = None
+            if cost_margin is not None:
+                predicted = roofline.family_candidate_seconds(
+                    name, dt, n=n_sample, d=d_in, k=int(k_heads),
+                    num_features=opts.get(name, {}).get("num_features"),
+                )
+            if (
+                cost_margin is not None
+                and predicted is not None
+                and best_predicted is not None
+                and predicted > cost_margin * best_predicted
+            ):
+                report.append({
+                    "family": name, "dtype": dt,
+                    "skipped": "pruned_by_cost",
+                    "predicted_cost_s": predicted,
+                    "meets_budget": False,
+                })
+                continue
             # caller opts override the defaults (so family_opts={'fourier':
             # {'seed': 7}} is legal); the shared sample doubles as fourier's
             # held-out set so it is not regenerated and re-scored inside
@@ -167,12 +201,18 @@ def compile_model(
                 "artifact_bytes": art.nbytes(),
                 "meets_budget": ok,
             }
+            if predicted is not None:
+                row["predicted_cost_s"] = predicted
             for key in ("quant_mean_abs_err", "quant_max_abs_err"):
                 if key in art.meta:
                     row[key] = art.meta[key]
             report.append(row)
             if ok:
                 candidates.append((latency_ms, art))
+                if predicted is not None and (
+                    best_predicted is None or predicted < best_predicted
+                ):
+                    best_predicted = predicted
 
     if not candidates:
         raise ValueError(

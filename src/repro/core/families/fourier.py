@@ -37,7 +37,12 @@ import numpy as np
 
 from repro.core import backend
 from repro.core.families import quantize
-from repro.core.families.base import CompiledArtifact, base_meta, stack_heads
+from repro.core.families.base import (
+    PAD_HEAD_BIAS,
+    CompiledArtifact,
+    base_meta,
+    stack_heads,
+)
 from repro.core.rbf import SVMModel, rbf_kernel
 from repro.kernels.common import TileConfig, tuning
 
@@ -285,6 +290,69 @@ def score(
         scores = backend.rff_score(
             Z, a["W"], a["phase"], a["weights"], a["b"], config=config
         )
+    valid = jnp.full(
+        (scores.shape[0],), bool(artifact.meta.get("valid_globally", True))
+    )
+    return scores, valid
+
+
+def pad_heads(artifact: CompiledArtifact, multiple: int) -> CompiledArtifact:
+    """Pad the head axis up to a multiple of ``multiple`` (head sharding).
+
+    Only the (K, F) readout and (K,) bias carry a head axis; padding
+    heads get zero weights and the argmax-neutral ``PAD_HEAD_BIAS``.
+    RFF validity is a per-artifact verdict, so padding cannot perturb it.
+    """
+    if artifact.dtype == quantize.INT8_DTYPE:
+        raise NotImplementedError(
+            "head padding/sharding supports f32 RFF artifacts; int8 head "
+            "sharding is future work"
+        )
+    k = artifact.num_heads
+    pad = (-k) % max(1, int(multiple))
+    if pad == 0:
+        return artifact
+    a = artifact.arrays
+    f = int(artifact.meta["num_features"])
+    arrays = dict(a)
+    arrays["weights"] = jnp.concatenate(
+        [a["weights"], jnp.zeros((pad, f), jnp.float32)]
+    )
+    arrays["b"] = jnp.concatenate(
+        [a["b"], jnp.full((pad,), PAD_HEAD_BIAS, jnp.float32)]
+    )
+    return CompiledArtifact(
+        family=NAME,
+        arrays=arrays,
+        meta={**artifact.meta, "padded_heads": k + pad},
+    )
+
+
+def score_sharded(
+    artifact: CompiledArtifact, Z, *, mesh, config: TileConfig | None = None
+):
+    """``score`` with the (K, F) readout partitioned over ``mesh``.
+
+    Dense projection only: the projection is per-row work and is
+    replicated per shard (see ``backend.rff_score_sharded`` for the
+    trade), so a Fastfood artifact — whose entire point is a cheap
+    projection — has nothing to win and is rejected. The validity
+    verdict is per-artifact meta, computed OUTSIDE the sharded region.
+    """
+    if artifact.dtype == quantize.INT8_DTYPE:
+        raise NotImplementedError(
+            "head-sharded serving supports f32 RFF artifacts; int8 head "
+            "sharding is future work"
+        )
+    if artifact.meta.get("projection") == "fastfood":
+        raise NotImplementedError(
+            "head-sharded serving needs the dense projection; Fastfood's "
+            "readout is thin by construction — shard the dense variant"
+        )
+    a = artifact.arrays
+    scores = backend.rff_score_sharded(
+        Z, a["W"], a["phase"], a["weights"], a["b"], mesh=mesh, config=config
+    )
     valid = jnp.full(
         (scores.shape[0],), bool(artifact.meta.get("valid_globally", True))
     )

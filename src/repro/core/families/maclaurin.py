@@ -33,7 +33,12 @@ import numpy as np
 from repro.core import backend
 from repro.core.bounds import REL_ERR_AT_HALF
 from repro.core.families import quantize
-from repro.core.families.base import CompiledArtifact, base_meta, stack_heads
+from repro.core.families.base import (
+    PAD_HEAD_BIAS,
+    CompiledArtifact,
+    base_meta,
+    stack_heads,
+)
 from repro.core.maclaurin import ApproxModel, approximate
 from repro.core.rbf import SVMModel
 from repro.kernels.common import TileConfig, tuning
@@ -177,6 +182,70 @@ def score(
         scores, _, valid = backend.quadform_heads(
             Z, a["M"], a["v"], a["c"], a["b"], a["gamma"], a["msq"], config=config
         )
+    return scores, jnp.all(valid, axis=-1)
+
+
+def pad_heads(artifact: CompiledArtifact, multiple: int) -> CompiledArtifact:
+    """Pad the head axis up to a multiple of ``multiple`` (head sharding).
+
+    Padding heads are VALIDITY-NEUTRAL and ARGMAX-NEUTRAL by
+    construction: msq = 0 satisfies the Eq 3.11 envelope for every row
+    (padding can never push a row to the exact path), and the
+    ``PAD_HEAD_BIAS`` bias can never win an argmax. ``meta.num_heads``
+    keeps the REAL head count — the engine slices scores back down at
+    materialization; ``meta.padded_heads`` records the served width.
+    The padded artifact is engine-internal: it is never registered
+    (padding would change the content digest).
+    """
+    if artifact.dtype == quantize.INT8_DTYPE:
+        raise NotImplementedError(
+            "head padding/sharding supports f32 quadform artifacts; int8 "
+            "head sharding is future work"
+        )
+    k, d = artifact.num_heads, artifact.d
+    pad = (-k) % max(1, int(multiple))
+    if pad == 0:
+        return artifact
+    a = artifact.arrays
+    f32 = jnp.float32
+    arrays = {
+        "M": jnp.concatenate([a["M"], jnp.zeros((pad, d, d), f32)]),
+        "v": jnp.concatenate([a["v"], jnp.zeros((pad, d), f32)]),
+        "c": jnp.concatenate([a["c"], jnp.zeros((pad,), f32)]),
+        "b": jnp.concatenate([a["b"], jnp.full((pad,), PAD_HEAD_BIAS, f32)]),
+        "gamma": jnp.concatenate([a["gamma"], jnp.ones((pad,), f32)]),
+        "msq": jnp.concatenate([a["msq"], jnp.zeros((pad,), f32)]),
+    }
+    return CompiledArtifact(
+        family=artifact.family,
+        arrays=arrays,
+        meta={**artifact.meta, "padded_heads": k + pad},
+    )
+
+
+def score_sharded(
+    artifact: CompiledArtifact, Z, *, mesh, config: TileConfig | None = None
+):
+    """``score`` with the K heads partitioned over ``mesh``'s first axis.
+
+    The (K, d, d) stacked Hessian — O(K d^2), the operand that outgrows
+    one device in the extreme-multiclass regime — lives shard-by-shard;
+    every device scores its K/shards heads with the same fused per-shard
+    primitive. Scores come back head-sharded (the engine's argmax
+    reduces across shards without a gather); the row-validity AND over
+    heads is likewise a cross-shard reduction XLA inserts. The head
+    count must already divide the axis size (``pad_heads``).
+    """
+    if artifact.dtype == quantize.INT8_DTYPE:
+        raise NotImplementedError(
+            "head-sharded serving supports f32 quadform artifacts; int8 "
+            "head sharding is future work"
+        )
+    a = artifact.arrays
+    scores, valid = backend.quadform_heads_sharded(
+        Z, a["M"], a["v"], a["c"], a["b"], a["gamma"], a["msq"],
+        mesh=mesh, config=config,
+    )
     return scores, jnp.all(valid, axis=-1)
 
 

@@ -66,4 +66,6 @@ def compile(                                                   # noqa: A001
 
 # Same artifact kind => same scorer and tuning resolution as maclaurin.
 score = _mac.score
+pad_heads = _mac.pad_heads
+score_sharded = _mac.score_sharded
 tile_lookup = _mac.tile_lookup

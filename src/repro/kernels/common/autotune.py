@@ -56,6 +56,26 @@ def sweep(
     return rows
 
 
+def prune_candidates(
+    candidates: list[TileConfig],
+    default: TileConfig,
+    prior: Callable[[TileConfig], float],
+    keep: int,
+) -> list[TileConfig]:
+    """The ``keep`` cheapest-predicted candidates, default ALWAYS kept.
+
+    ``prior`` maps a config to a predicted cost (e.g. the analytic
+    roofline terms in ``repro.launch.roofline`` — ``quadform_tile_seconds``
+    and friends). Pruning only decides what gets MEASURED; keeping the
+    default in the measured set preserves autotune's never-worse-than-
+    default guarantee even under a badly mis-calibrated prior.
+    """
+    ranked = sorted(candidates, key=prior)
+    kept = set(ranked[: max(1, int(keep))])
+    kept.add(default)
+    return [c for c in candidates if c in kept]
+
+
 def autotune(
     kernel: str,
     key: str,
@@ -65,17 +85,25 @@ def autotune(
     repeats: int = 5,
     warmup: int = 2,
     source: str | None = None,
+    prior: Callable[[TileConfig], float] | None = None,
+    prior_keep: int | None = None,
 ) -> tuple[TileConfig, list[dict]]:
     """Sweep, pick the fastest, record it for (kernel, platform(), key).
 
     Returns (winner, all sweep rows). The default config for ``kernel``
     is appended to the candidates if absent, so the recorded winner can
-    only tie or beat it.
+    only tie or beat it. With ``prior`` + ``prior_keep``, only the
+    ``prior_keep`` candidates with the cheapest predicted cost are
+    measured (``prune_candidates``) — rank-and-prune, never
+    pick-by-prediction: the winner is still chosen by measurement over a
+    set that includes the default.
     """
     cands = list(candidates)
     default = tuning.lookup(kernel)
     if default not in cands:
         cands.append(default)
+    if prior is not None and prior_keep is not None:
+        cands = prune_candidates(cands, default, prior, prior_keep)
     rows = sweep(build, cands, repeats=repeats, warmup=warmup)
     winner = min(rows, key=lambda r: r["ms"])
     default_ms = next(r["ms"] for r in rows if r["config"] == default)

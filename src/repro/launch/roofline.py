@@ -19,6 +19,16 @@ MODEL_FLOPS uses the classic estimators (6 N_active D for train,
 2 N_active D for single forward) against global HLO FLOPs to expose
 remat/dispatch overheads. Hardware constants per the brief (TPU v5e):
 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The same three-term model doubles as the ANALYTIC PRIOR for the serving
+kernels' tile search (``*_tile_seconds`` below): per candidate
+``TileConfig`` the weight-streaming traffic is a closed form in the tile
+shape, so the autotuner can rank candidates and measure only the
+plausibly-fast ones, and ``compile_model`` can skip compiling candidates
+whose predicted cost is hopeless (``family_candidate_seconds``). The
+prior ranks — measurement still decides (the never-worse-than-default
+guarantee lives in ``kernels.common.autotune``, which always measures
+the default).
 """
 
 from __future__ import annotations
@@ -51,6 +61,75 @@ def wire_bytes(collective_ops: list[dict], default_group: int = 16) -> float:
         else:  # collective-permute
             total += b
     return total
+
+
+def predict_seconds(flops: float, bytes_accessed: float, wire: float = 0.0) -> float:
+    """Roofline lower bound for one kernel invocation: the binding term."""
+    t = max(flops / PEAK_FLOPS, bytes_accessed / HBM_BW)
+    if wire:
+        t = max(t, wire / ICI_BW)
+    return t
+
+
+def _row_blocks(n: int, block_n) -> int:
+    """How many row tiles a batch of ``n`` splits into under ``block_n``."""
+    n = max(1, int(n))
+    b = int(block_n) if block_n else n
+    b = max(1, min(b, n))
+    return -(-n // b)
+
+
+def quadform_tile_seconds(cfg, *, n: int, d: int, k: int,
+                          weight_bytes: int = 4) -> float:
+    """Analytic cost of one fused quadform step (Eq 3.8, all K heads).
+
+    The (K, d, d) stacked Hessian is re-streamed once per row tile —
+    the term that actually moves with ``block_n`` (bigger tiles amortize
+    the weight traffic; FLOPs are tile-invariant). ``weight_bytes=1``
+    models the int8 variants.
+    """
+    blocks = _row_blocks(n, getattr(cfg, "block_n", None) if cfg else None)
+    flops = 2.0 * n * k * d * (d + 1)
+    stream = float(blocks) * k * d * d * weight_bytes
+    io = 4.0 * (n * d + n * k) + float(weight_bytes) * k * d
+    return predict_seconds(flops, stream + io)
+
+
+def rbf_tile_seconds(cfg, *, n: int, d: int, m: int) -> float:
+    """Analytic cost of the exact streaming ``rbf_pred`` path (m SVs)."""
+    blocks = _row_blocks(n, getattr(cfg, "block_n", None) if cfg else None)
+    flops = 2.0 * n * m * d
+    stream = float(blocks) * m * d * 4.0
+    io = 4.0 * (n * d + n)
+    return predict_seconds(flops, stream + io)
+
+
+def rff_tile_seconds(cfg, *, n: int, d: int, f: int, k: int,
+                     weight_bytes: int = 4) -> float:
+    """Analytic cost of the fused RFF step (projection + readout GEMMs)."""
+    blocks = _row_blocks(n, getattr(cfg, "block_n", None) if cfg else None)
+    flops = 2.0 * n * f * (d + k)
+    stream = float(blocks) * (f * d + k * f) * float(weight_bytes)
+    io = 4.0 * (n * d + n * k)
+    return predict_seconds(flops, stream + io)
+
+
+def family_candidate_seconds(
+    family: str, dtype: str, *, n: int, d: int, k: int,
+    num_features: int | None = None, cfg=None,
+) -> float | None:
+    """Predicted serving seconds for one ``compile_model`` candidate.
+
+    Returns ``None`` for families without an analytic model — the caller
+    must then measure (never prune on ignorance).
+    """
+    wb = 1 if dtype == "int8" else 4
+    if family in ("maclaurin", "poly2"):
+        return quadform_tile_seconds(cfg, n=n, d=d, k=k, weight_bytes=wb)
+    if family == "fourier":
+        f = int(num_features) if num_features else 1024  # fourier default
+        return rff_tile_seconds(cfg, n=n, d=d, f=f, k=k, weight_bytes=wb)
+    return None
 
 
 def model_flops(meta: dict) -> float:

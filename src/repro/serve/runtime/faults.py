@@ -19,6 +19,13 @@ Sites (the strings the runtime consults):
     (re)loading an artifact from disk; a fault raises ``InjectedFault``
     (transient load failure: the entry is NOT quarantined and the next
     resolve retries).
+  * ``"engine_step#<i>"`` — the replica-scoped variant a multi-replica
+    ``MicroBatcher`` consults via ``check_replica``: scripted verdicts
+    for replica ``i`` only (fault-isolation tests trip ONE replica's
+    breaker while its siblings keep serving). Replica sites are
+    scripted-only — when nothing is queued for the replica site the
+    check falls through to the base site, so seeded rates behave
+    identically whether a model runs 1 replica or N.
 
 Two ways to schedule faults, composable:
 
@@ -43,6 +50,7 @@ from __future__ import annotations
 import collections
 import threading
 import time
+import zlib
 
 import numpy as np
 
@@ -120,11 +128,13 @@ class FaultInjector:
         if script:
             return script.popleft()
         # per-site rng: the k-th draw of a site is the same in every run
-        # and does not depend on how other sites interleave with it
+        # and does not depend on how other sites interleave with it.
+        # crc32, not hash(): str hashing is salted per process
+        # (PYTHONHASHSEED), which would silently break replayability.
         rng = self._rngs.get(site)
         if rng is None:
             rng = self._rngs[site] = np.random.default_rng(
-                abs(hash((self.seed, site))) % (2**32)
+                zlib.crc32(f"{self.seed}/{site}".encode())
             )
         u = float(rng.random())
         if u < self._rates.get(site, 0.0):
@@ -154,6 +164,31 @@ class FaultInjector:
             self._sleep(self.slow_step_s)
         elif verdict == "fault":
             raise InjectedFault(site, ordinal)
+
+    @staticmethod
+    def replica_site(site: str, index: int) -> str:
+        """The scripted-only site name scoping ``site`` to one replica."""
+        return f"{site}#{int(index)}"
+
+    def check_replica(self, site: str, index: int) -> None:
+        """``check`` for replica ``index`` of ``site``.
+
+        A verdict scripted for the replica site (``fail_next(
+        replica_site(site, i))``) OVERRIDES the base site entirely —
+        including a scripted "pass", so a test can pin one replica
+        healthy. With nothing scripted for the replica, the base site is
+        consulted as usual (its ordinal stream is shared by all
+        replicas, in dispatch order).
+        """
+        rep = self.replica_site(site, index)
+        with self._lock:
+            scripted = bool(self._scripts.get(rep))
+        if scripted:
+            # replica sites carry no seeded rates: an exhausted script
+            # can never fault by accident, only by being scripted again
+            self.check(rep)
+        else:
+            self.check(site)
 
     def snapshot(self) -> dict:
         with self._lock:

@@ -47,6 +47,8 @@ import os
 import threading
 import zipfile
 
+import jax
+
 from repro.core.families import CompiledArtifact
 from repro.core.families.base import _HEADER_MEMBER
 from repro.serve.runtime.errors import ArtifactCorrupt
@@ -64,8 +66,10 @@ class RegistryEntry:
     path: str | None = None                 # reload source for lazy/evicted
     artifact: CompiledArtifact | None = None
     exact: object | None = None             # SVMModel for the exact fallback
-    engine: SVMEngine | None = None
-    nbytes: int = 0                         # artifact array bytes once known
+    engine: SVMEngine | None = None         # primary replica (replicas[0])
+    replicas: int = 1                       # engines to build from this digest
+    engines: list = dataclasses.field(default_factory=list)
+    nbytes: int = 0                         # resident bytes once known
     tick: int = 0                           # LRU clock stamp
     evictions: int = 0
     quarantined: str | None = None          # corruption reason; fail fast
@@ -146,12 +150,19 @@ class ArtifactRegistry:
         alias: str | None = None,
         exact=None,
         path: str | None = None,
+        replicas: int | None = None,
     ) -> str:
         """Index ``artifact`` under its content digest; returns the digest.
 
         Re-registering an identical compile is a no-op on the entry
         (dedupe); ``alias``/``exact``/``path`` still update, so a caller
         can attach a fallback model or a name to an existing digest.
+
+        ``replicas=N`` asks for N engines from this one digest (content
+        addressing makes them trivially consistent — same bytes, same
+        compiled step), each pinned round-robin to a local device.
+        ``None`` leaves the entry's current replica count alone, so a
+        plain re-register never silently collapses a scaled-out model.
         """
         digest = artifact.digest()
         with self._lock:
@@ -165,6 +176,17 @@ class ArtifactRegistry:
                 entry.exact = exact
             if path is not None:
                 entry.path = path
+            if replicas is not None:
+                r = int(replicas)
+                if r < 1:
+                    raise ValueError(f"replicas must be >= 1, got {replicas}")
+                if r != entry.replicas:
+                    # retire every built replica atomically: the next
+                    # resolve rebuilds at the new count, and the runtime's
+                    # engine-identity check retires the stale batcher
+                    entry.replicas = r
+                    entry.engines = []
+                    entry.engine = None
             if alias is not None:
                 self._aliases[alias] = digest
         return digest
@@ -227,10 +249,12 @@ class ArtifactRegistry:
             self._aliases[alias] = digest
             return digest
 
-    def publish(self, alias: str, artifact: CompiledArtifact, *, exact=None) -> str:
+    def publish(self, alias: str, artifact: CompiledArtifact, *, exact=None,
+                replicas: int | None = None) -> str:
         """Register + flip ``alias`` in one atomic step; returns the digest."""
         with self._lock:
-            return self.register(artifact, alias=alias, exact=exact)
+            return self.register(artifact, alias=alias, exact=exact,
+                                 replicas=replicas)
 
     def aliases(self) -> dict[str, str]:
         with self._lock:
@@ -259,10 +283,17 @@ class ArtifactRegistry:
     # --------------------------------------------------------------- serving
 
     def get_engine(self, ref: str) -> tuple[str, SVMEngine]:
-        """(digest, ready engine) for ``ref``; loads/builds/warms on miss.
+        """(digest, primary ready engine) for ``ref``; builds on miss."""
+        digest, engines = self.get_engines(ref)
+        return digest, engines[0]
+
+    def get_engines(self, ref: str) -> tuple[str, list[SVMEngine]]:
+        """(digest, replica engines) for ``ref``; loads/builds/warms on miss.
 
         The build happens under the ENTRY lock, not the registry lock, so
-        warming one cold model never stalls lookups of hot ones.
+        warming one cold model never stalls lookups of hot ones. All of
+        the entry's replicas are built together (and evicted together):
+        a caller never observes a half-scaled model.
 
         Raises ``ArtifactCorrupt`` (fail-fast, no disk retry) for a
         quarantined entry, and quarantines on the spot if the reload
@@ -277,13 +308,16 @@ class ArtifactRegistry:
                     digest=digest, path=entry.path,
                 )
             entry.tick = next(self._clock)
-            engine = entry.engine
-        if engine is not None:
+            engines = list(entry.engines)
+            want = max(1, entry.replicas)
+        if len(engines) == want:
             self.hits += 1                   # approximate under race; fine
-            return digest, engine
+            return digest, engines
         with entry.lock:
-            engine = entry.engine                # re-check under the build lock
-            if engine is None:
+            with self._lock:                 # re-check under the build lock
+                engines = list(entry.engines)
+                want = max(1, entry.replicas)
+            if len(engines) != want:
                 artifact = entry.artifact
                 if artifact is None:
                     if entry.path is None:
@@ -291,16 +325,33 @@ class ArtifactRegistry:
                             f"entry {digest[:12]} has no artifact and no path"
                         )
                     artifact = self._load_verified(entry)
-                engine = SVMEngine(artifact, entry.exact, **self.engine_opts)
-                if self.warmup_on_load:
-                    engine.warmup()
+                engines = self._build_replicas(artifact, entry.exact, want)
                 with self._lock:
                     entry.artifact = artifact
-                    entry.nbytes = artifact.nbytes()
-                    entry.engine = engine
+                    # each replica bakes its own device copy of the arrays
+                    entry.nbytes = artifact.nbytes() * want
+                    entry.engines = engines
+                    entry.engine = engines[0]
                     self.loads += 1
         self._evict_to_budget(keep=digest)
-        return digest, engine
+        return digest, engines
+
+    def _build_replicas(self, artifact, exact, count: int) -> list[SVMEngine]:
+        """``count`` engines off one artifact, pinned round-robin across
+        local devices (pinning is skipped when the caller already chose
+        placement via ``device=`` / ``head_mesh=`` engine opts)."""
+        devices = jax.local_devices()
+        engines = []
+        for i in range(count):
+            opts = dict(self.engine_opts)
+            if (count > 1 and "device" not in opts
+                    and "head_mesh" not in opts):
+                opts["device"] = devices[i % len(devices)]
+            engine = SVMEngine(artifact, exact, **opts)
+            if self.warmup_on_load:
+                engine.warmup()
+            engines.append(engine)
+        return engines
 
     def _quarantine(self, entry: RegistryEntry, reason: str) -> None:
         with self._lock:
@@ -361,7 +412,8 @@ class ArtifactRegistry:
                     break
                 if entry.digest == keep:
                     continue
-                entry.engine = None
+                entry.engine = None          # every replica retires together:
+                entry.engines = []           # eviction is all-or-nothing
                 if entry.path is not None:
                     entry.artifact = None    # reloadable: drop the arrays too
                 entry.evictions += 1

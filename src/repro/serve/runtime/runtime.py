@@ -97,9 +97,17 @@ class Runtime:
 
     # ------------------------------------------------------------ publishing
 
-    def publish(self, alias: str, artifact: CompiledArtifact, *, exact=None) -> str:
-        """Register ``artifact`` and atomically point ``alias`` at it."""
-        return self.registry.publish(alias, artifact, exact=exact)
+    def publish(self, alias: str, artifact: CompiledArtifact, *, exact=None,
+                replicas: int | None = None) -> str:
+        """Register ``artifact`` and atomically point ``alias`` at it.
+
+        ``replicas=N`` scales the model out over N engines (pinned
+        round-robin across local devices); the model's batcher then
+        routes each flush to the least-loaded replica. ``None`` keeps
+        the current count (default 1).
+        """
+        return self.registry.publish(alias, artifact, exact=exact,
+                                     replicas=replicas)
 
     def register(self, artifact: CompiledArtifact, **kw) -> str:
         return self.registry.register(artifact, **kw)
@@ -112,7 +120,8 @@ class Runtime:
 
     # --------------------------------------------------------------- serving
 
-    def _batcher(self, digest: str, engine) -> MicroBatcher:
+    def _batcher(self, digest: str, engines: list) -> MicroBatcher:
+        engine = engines[0]
         b = self._batchers.get(digest)
         if b is not None and b.engine is engine:
             return b
@@ -123,8 +132,10 @@ class Runtime:
             b = self._batchers.get(digest)
             if b is None or b.engine is not engine:
                 # first use, or the registry evicted + rebuilt this model's
-                # engine: retire the old batcher (it drains in-flight work
-                # on the old engine) and route new traffic to the fresh one.
+                # engines (including a replica-count change, which swaps
+                # the whole replica set atomically): retire the old
+                # batcher (it drains in-flight work on the old engines)
+                # and route new traffic to the fresh ones.
                 stale = b
                 tel = self._telemetry.setdefault(digest, ModelTelemetry())
                 b = MicroBatcher(
@@ -136,6 +147,7 @@ class Runtime:
                     max_queue_rows=self.max_queue_rows,
                     breaker=self.breaker,
                     fault_injector=self.faults,
+                    engines=engines,
                 )
                 self._batchers[digest] = b
         if stale is not None:
@@ -168,9 +180,9 @@ class Runtime:
         if deadline_s is None:
             deadline_s = self.default_deadline_s
         while True:
-            digest, engine = self.registry.get_engine(model)
+            digest, engines = self.registry.get_engines(model)
             try:
-                fut = self._batcher(digest, engine).submit(
+                fut = self._batcher(digest, engines).submit(
                     Z, deadline_s=deadline_s
                 )
             except BatcherClosed:
@@ -220,6 +232,12 @@ class Runtime:
             out["digest"] = digest
             if batcher is not None and batcher.breaker is not None:
                 out["breaker"]["config"] = batcher.breaker.snapshot()
+                # live per-replica circuits (telemetry's "replicas" block
+                # holds the counters; this is current state + config)
+                out["breaker"]["per_replica"] = [
+                    r.breaker.snapshot() if r.breaker is not None else None
+                    for r in batcher.replicas
+                ]
             entry = self.registry._entries.get(digest)
             if entry is not None:
                 out["evictions"] = entry.evictions

@@ -48,6 +48,26 @@ Robustness layer (overload, faults, graceful degradation):
     queue exceptionally on the way out. Every admitted future
     terminates, exactly once.
 
+Scale-out layer (``engines=[...]``, PR 7): the batcher can front N
+REPLICA engines built from the same digest (content addressing makes
+them interchangeable — same artifact bytes, same compiled step). One
+coalescing queue feeds a least-loaded dispatcher: each flush routes to
+the admitted replica with the fewest in-flight rows, round-robin among
+ties. Every replica carries its OWN circuit breaker, so a faulting
+device degrades only itself — flushes simply stop selecting it while
+its siblings keep the fast path, and the half-open probe window re-
+admits it replica-by-replica. Only when EVERY replica refuses the fast
+path does the batcher fall back to the degraded exact path (or shed).
+With more than one replica each gets a dedicated dispatch thread:
+host-side padding + device dispatch for replica i never head-of-line
+blocks replica j, which is what turns N devices into ~N× throughput.
+Flushes are capped at the engine's ``max_batch`` rows (the engine's
+own chunking unit), so a deep queue SPREADS across replicas instead of
+riding one replica as a single mega-flush the engine would chunk
+serially.
+With a single replica (the default) dispatch stays inline on the flush
+thread — byte-identical behavior to the pre-replica batcher.
+
 Everything the engine guarantees survives coalescing:
 
   * **zero steady-state recompiles** — the concatenated rows go through
@@ -68,6 +88,7 @@ Everything the engine guarantees survives coalescing:
 from __future__ import annotations
 
 import collections
+import queue
 import threading
 import time
 from concurrent.futures import Future
@@ -101,8 +122,9 @@ class CircuitBreaker:
     open   --[``reset_after_s`` elapsed]--> half_open (one probe batch)
     half_open --[probe succeeds]--> closed / --[probe fails]--> open
 
-    Driven entirely by the single flush thread (no internal lock);
-    ``state`` reads from other threads are single attribute loads.
+    Internally locked: with replica dispatch threads, ``allow_fast``
+    (flush thread) and ``record_*`` (the replica's dispatch thread) may
+    race; ``state`` reads from other threads stay single attribute loads.
     """
 
     def __init__(self, *, fail_threshold: int = 3, reset_after_s: float = 0.25,
@@ -115,33 +137,46 @@ class CircuitBreaker:
         self.state = "closed"
         self.consecutive_failures = 0
         self._opened_at = 0.0
+        self._lock = threading.Lock()
+
+    def clone(self) -> "CircuitBreaker":
+        """A fresh breaker with this one's configuration (per-replica)."""
+        return CircuitBreaker(fail_threshold=self.fail_threshold,
+                              reset_after_s=self.reset_after_s,
+                              clock=self._clock)
 
     def allow_fast(self) -> bool:
         """May the next batch use the fast path? Transitions open →
         half_open when the probe window arrives (that batch IS the probe)."""
-        if self.state == "open":
-            if self._clock() - self._opened_at >= self.reset_after_s:
-                self.state = "half_open"
-                return True
-            return False
-        return True                     # closed, or half_open (another probe)
+        with self._lock:
+            if self.state == "open":
+                if self._clock() - self._opened_at >= self.reset_after_s:
+                    self.state = "half_open"
+                    return True
+                return False
+            return True                 # closed, or half_open (another probe)
 
     def record_success(self) -> None:
-        self.consecutive_failures = 0
-        self.state = "closed"
+        with self._lock:
+            self.consecutive_failures = 0
+            self.state = "closed"
 
     def record_failure(self) -> None:
-        self.consecutive_failures += 1
-        if self.state == "half_open" or \
-                self.consecutive_failures >= self.fail_threshold:
-            self.state = "open"
-            self._opened_at = self._clock()
+        with self._lock:
+            self.consecutive_failures += 1
+            if self.state == "half_open" or \
+                    self.consecutive_failures >= self.fail_threshold:
+                self.state = "open"
+                self._opened_at = self._clock()
 
     def retry_after(self) -> float:
         """Time until the breaker would next admit a probe (0 if not open)."""
-        if self.state != "open":
-            return 0.0
-        return max(0.0, self.reset_after_s - (self._clock() - self._opened_at))
+        with self._lock:
+            if self.state != "open":
+                return 0.0
+            return max(
+                0.0, self.reset_after_s - (self._clock() - self._opened_at)
+            )
 
     def snapshot(self) -> dict:
         return {
@@ -161,6 +196,33 @@ def _resolve_breaker(breaker) -> CircuitBreaker | None:
     if isinstance(breaker, CircuitBreaker) or breaker is None or breaker is False:
         return breaker or None
     raise TypeError(f"breaker must be bool, dict or CircuitBreaker, got {breaker!r}")
+
+
+class _Replica:
+    """One engine instance behind the batcher (usually one device).
+
+    Owns its breaker (a faulting replica degrades only itself) and —
+    when the batcher runs more than one replica — a dedicated dispatch
+    thread, so padding + device dispatch for one replica never blocks
+    its siblings. ``inflight_rows`` (guarded by the batcher's
+    accounting lock) counts rows dispatched but not yet materialized or
+    failed; it is the least-loaded dispatch signal.
+    """
+
+    __slots__ = ("index", "engine", "breaker", "inflight_rows", "flushes",
+                 "rows", "failures", "last_state", "jobs", "thread")
+
+    def __init__(self, index: int, engine, breaker: CircuitBreaker | None):
+        self.index = index
+        self.engine = engine
+        self.breaker = breaker
+        self.inflight_rows = 0
+        self.flushes = 0
+        self.rows = 0
+        self.failures = 0
+        self.last_state = "closed"
+        self.jobs: queue.SimpleQueue | None = None   # set when threaded
+        self.thread: threading.Thread | None = None
 
 
 class _EmptyResult:
@@ -207,6 +269,9 @@ class MicroBatcher:
         (off), a kwargs dict, or a ``CircuitBreaker``.
       * ``fault_injector`` — a ``faults.FaultInjector`` consulted at the
         ``engine_step`` site before every fast-path flush (chaos tests).
+      * ``engines`` — replica engines for the same digest
+        (``engines[0]`` must be ``engine``); flushes spread over them
+        least-loaded, each behind its own breaker clone.
     """
 
     def __init__(
@@ -220,7 +285,11 @@ class MicroBatcher:
         max_queue_rows: int | None = None,
         breaker=True,
         fault_injector: FaultInjector | None = None,
+        engines: list | None = None,
     ):
+        engs = [engine] if engines is None else list(engines)
+        if not engs or engs[0] is not engine:
+            raise ValueError("engines[0] must be the primary engine")
         if flush_rows is None:
             flush_rows = engine.min_bucket
         if flush_rows < 1 or flush_rows > engine.max_batch:
@@ -238,14 +307,33 @@ class MicroBatcher:
         self.max_queue_rows = max_queue_rows
         self.telemetry = telemetry if telemetry is not None else ModelTelemetry()
         self.name = name
-        self.breaker = _resolve_breaker(breaker)
+        # replica 0 keeps the caller-supplied breaker (and the public
+        # ``self.breaker`` back-compat handle); siblings get fresh clones
+        # of the same config so one replica's failures never bleed into
+        # another's consecutive-failure count
+        primary = _resolve_breaker(breaker)
+        self.breaker = primary
+        self.replicas = [
+            _Replica(i, eng, primary if i == 0
+                     else (primary.clone() if primary is not None else None))
+            for i, eng in enumerate(engs)
+        ]
         self.faults = fault_injector
-        self._last_breaker_state = "closed"
         self._step_time_s = self.max_wait_s or 1e-4   # EWMA of measured steps
         self._queue: collections.deque[_Pending] = collections.deque()
         self._queued_rows = 0
         self._cond = threading.Condition()
+        self._acct = threading.Lock()     # replica inflight/counter guard
+        self._rr = 0                      # round-robin tiebreak cursor
         self._closed = False
+        if len(self.replicas) > 1:
+            for r in self.replicas:
+                r.jobs = queue.SimpleQueue()
+                r.thread = threading.Thread(
+                    target=self._replica_run, args=(r,),
+                    name=f"microbatch-{name}-r{r.index}", daemon=True,
+                )
+                r.thread.start()
         self._worker = threading.Thread(
             target=self._run, name=f"microbatch-{name}", daemon=True
         )
@@ -332,6 +420,12 @@ class MicroBatcher:
             self._cond.notify_all()
         self._worker.join(timeout=5.0)
         self.flush()                               # anything enqueued at the wire
+        for r in self.replicas:                    # drain replica dispatchers:
+            if r.jobs is not None:                 # the sentinel queues BEHIND
+                r.jobs.put(None)                   # any still-pending flushes
+        for r in self.replicas:
+            if r.thread is not None:
+                r.thread.join(timeout=5.0)
         with self._cond:                           # belt and braces: no future
             leftovers = self._drain_locked()       # survives close unresolved
         self._fail_batch(leftovers,
@@ -345,11 +439,35 @@ class MicroBatcher:
 
     # ---------------------------------------------------------------- worker
 
-    def _drain_locked(self) -> list[_Pending]:
-        batch = list(self._queue)
-        self._queue.clear()
-        self._queued_rows = 0
+    def _drain_locked(self, limit: int | None = None) -> list[_Pending]:
+        """Pop queued requests: all of them, or whole requests up to
+        ``limit`` rows (always at least one — a single oversized request
+        still flushes; the engine chunks it internally)."""
+        if limit is None:
+            batch = list(self._queue)
+            self._queue.clear()
+            self._queued_rows = 0
+            return batch
+        batch, rows = [], 0
+        while self._queue:
+            r = self._queue[0].Z.shape[0]
+            if batch and rows + r > limit:
+                break
+            batch.append(self._queue.popleft())
+            rows += r
+        self._queued_rows -= rows
         return batch
+
+    def _flush_limit(self) -> int:
+        """Max rows per flush: the engine's ``max_batch``.
+
+        The engine chunks anything larger into sequential ``max_batch``
+        steps anyway, so an unbounded flush is one giant serialized
+        submit — under replicas it would ride ONE replica while its
+        siblings idle. Capping the flush at the engine's own compute
+        unit keeps dispatch and compute granularity aligned and lets
+        the least-loaded dispatcher spread a deep queue."""
+        return self.engine.max_batch
 
     def _pop_expired_locked(self, now: float) -> list[_Pending]:
         """Remove queued items whose deadline has passed; returns them."""
@@ -384,7 +502,7 @@ class MicroBatcher:
                             self._drain_locked(), False, False
                     elif self._queued_rows >= self.flush_rows:
                         batch, deadline_hit, tightened = \
-                            self._drain_locked(), False, False
+                            self._drain_locked(self._flush_limit()), False, False
                     else:
                         now = time.perf_counter()
                         expired = self._pop_expired_locked(now)
@@ -400,7 +518,8 @@ class MicroBatcher:
                             if remaining > 0:
                                 self._cond.wait(timeout=remaining)
                                 continue                   # re-evaluate
-                            batch, deadline_hit = self._drain_locked(), True
+                            batch, deadline_hit = \
+                                self._drain_locked(self._flush_limit()), True
                             tightened = wait_s < self.max_wait_s * TIGHTENED_BELOW
                 if expired:
                     self._fail_expired(expired)
@@ -438,15 +557,35 @@ class MicroBatcher:
             f"before a flush could serve them"
         ))
 
-    def _sync_breaker_telemetry(self) -> None:
-        st = self.breaker.state
-        if st != self._last_breaker_state:
+    def _sync_breaker_telemetry(self, replica: _Replica) -> None:
+        if replica.breaker is None:
+            return
+        st = replica.breaker.state
+        if st != replica.last_state:
             self.telemetry.record_breaker_state(
                 st,
                 tripped=(st == "open"),
                 probe=(st == "half_open"),
+                replica=replica.index,
             )
-            self._last_breaker_state = st
+            replica.last_state = st
+
+    def _select_replica(self) -> _Replica | None:
+        """Least-loaded replica whose breaker admits the fast path
+        (round-robin among ties); ``None`` when every replica refuses —
+        the all-breakers-open signal that degrades the whole flush.
+        ``allow_fast`` is consulted per replica, so an open sibling is
+        simply skipped while its probe window has not arrived."""
+        n = len(self.replicas)
+        allowed = [r for r in self.replicas
+                   if r.breaker is None or r.breaker.allow_fast()]
+        if not allowed:
+            return None
+        with self._acct:
+            chosen = min(allowed, key=lambda r: (r.inflight_rows,
+                                                 (r.index - self._rr) % n))
+            self._rr = (chosen.index + 1) % n
+        return chosen
 
     def _execute(self, batch: list[_Pending], *, deadline: bool,
                  tightened: bool = False) -> None:
@@ -465,20 +604,51 @@ class MicroBatcher:
         sizes = [p.Z.shape[0] for p in batch]
         rows = int(sum(sizes))
 
-        if self.breaker is not None and not self.breaker.allow_fast():
-            self._sync_breaker_telemetry()
+        replica = self._select_replica()
+        for r in self.replicas:
+            self._sync_breaker_telemetry(r)       # open -> half_open probes
+        if replica is None:                       # every breaker refused
             self._execute_degraded(batch, sizes, rows,
                                    deadline=deadline, tightened=tightened)
             return
-        if self.breaker is not None:
-            self._sync_breaker_telemetry()        # open -> half_open probe
+        with self._acct:
+            replica.inflight_rows += rows
+        if replica.jobs is not None:              # threaded replica dispatch
+            replica.jobs.put((batch, sizes, rows, deadline, tightened))
+            return
+        self._dispatch(replica, batch, sizes, rows,
+                       deadline=deadline, tightened=tightened)
 
+    def _replica_run(self, replica: _Replica) -> None:
+        while True:
+            job = replica.jobs.get()
+            if job is None:
+                return
+            batch, sizes, rows, deadline, tightened = job
+            try:
+                self._dispatch(replica, batch, sizes, rows,
+                               deadline=deadline, tightened=tightened)
+            except BaseException as e:            # _dispatch's own handling
+                for p in batch:                   # failed: nothing may hang
+                    if not p.future.done():
+                        try:
+                            p.future.set_exception(e)
+                        except Exception:
+                            pass
+
+    def _dispatch(self, replica: _Replica, batch: list[_Pending], sizes,
+                  rows: int, *, deadline: bool, tightened: bool) -> None:
+        """One fast-path flush on ``replica`` — inline on the flush
+        thread (single replica) or on the replica's dispatch thread."""
         t0 = time.perf_counter()
         try:
             if self.faults is not None:
-                self.faults.check(ENGINE_STEP)
+                if len(self.replicas) > 1:
+                    self.faults.check_replica(ENGINE_STEP, replica.index)
+                else:
+                    self.faults.check(ENGINE_STEP)
             Z = np.concatenate([p.Z for p in batch], axis=0)
-            result = self.engine.submit(Z)
+            result = replica.engine.submit(Z)
             # e2e latency closes when the SHARED result first materializes
             # (one sample per coalesced request, recorded by whichever
             # client thread syncs first); per-row validity feeds the
@@ -486,47 +656,67 @@ class MicroBatcher:
             enqueued = [p.t_enqueue for p in batch]
             telemetry = self.telemetry
 
-            def _on_materialize(done, ts=enqueued, tel=telemetry, n=rows):
+            def _on_materialize(done, ts=enqueued, tel=telemetry, n=rows,
+                                rep=replica):
                 t_done = time.perf_counter()
                 for t_enq in ts:
                     tel.record_latency(t_done - t_enq)
                 valid = np.asarray(done[1])
                 tel.record_validity(n, int(n - int(valid.sum())))
+                with self._acct:
+                    rep.inflight_rows -= n
 
             result.on_materialize = _on_materialize
             slices = result.split(sizes)
         except BaseException as e:                 # scatter the failure too
+            with self._acct:
+                replica.inflight_rows -= rows
+                replica.failures += 1
             self.telemetry.record_flush(len(batch), rows, deadline=deadline,
                                         tightened=tightened)
             self.telemetry.record_batch_failure(len(batch), rows)
-            if self.breaker is not None:
-                self.breaker.record_failure()
-                self._sync_breaker_telemetry()
+            self.telemetry.record_replica_failure(replica.index)
+            if replica.breaker is not None:
+                replica.breaker.record_failure()
+                self._sync_breaker_telemetry(replica)
             self._fail_batch(batch, e)
             return
-        if self.breaker is not None:
-            self.breaker.record_success()
-            self._sync_breaker_telemetry()
-        # EWMA of step enqueue time feeds the retry_after_s estimate
-        self._step_time_s = 0.8 * self._step_time_s + \
-            0.2 * (time.perf_counter() - t0)
+        if replica.breaker is not None:
+            replica.breaker.record_success()
+            self._sync_breaker_telemetry(replica)
+        with self._acct:
+            # EWMA of step enqueue time feeds the retry_after_s estimate
+            self._step_time_s = 0.8 * self._step_time_s + \
+                0.2 * (time.perf_counter() - t0)
+            replica.flushes += 1
+            replica.rows += rows
         self.telemetry.record_flush(len(batch), rows, deadline=deadline,
                                     tightened=tightened)
+        self.telemetry.record_replica_flush(replica.index, len(batch), rows)
         for p, s in zip(batch, slices):
             if p.future.set_running_or_notify_cancel():
                 p.future.set_result(s)
 
     def _execute_degraded(self, batch: list[_Pending], sizes, rows: int, *,
                           deadline: bool, tightened: bool) -> None:
-        """Breaker-open serving: exact ``rbf_pred`` path, or shed."""
+        """Breaker-open serving: exact ``rbf_pred`` path, or shed.
+
+        Reached only when EVERY replica's breaker refuses the fast path;
+        it runs inline on the flush thread against the primary engine
+        (the exact path is the already-degraded slow lane — fanning it
+        out across replicas would just multiply pressure on the host).
+        """
         if not getattr(self.engine, "exact_available", False):
+            # soonest probe window across replicas: the honest retry hint
+            retry = min((r.breaker.retry_after() for r in self.replicas
+                         if r.breaker is not None), default=0.0)
             self.telemetry.record_flush(len(batch), rows, deadline=deadline,
                                         tightened=tightened)
             self.telemetry.record_breaker_shed(len(batch))
             self._fail_batch(batch, RuntimeOverloaded(
                 f"model {self.name!r}: circuit breaker open and no exact "
                 f"model published to degrade to",
-                retry_after_s=self.breaker.retry_after() or self.max_wait_s,
+                retry_after_s=retry or self.max_wait_s,
             ))
             return
         try:

@@ -40,6 +40,12 @@ can produce is observable — nothing sheds or fails silently):
     model was published;
   * **canary / recompiles** — the ``DriftGuard`` self-healing loop's
     verdicts (recompiles triggered, canaries passed/failed);
+  * **replicas** — per-replica flush/row/failure counters plus each
+    replica's last observed breaker state: the scale-out dispatcher's
+    observability (is load actually spreading? which replica is the
+    one tripping?). The model-level ``breaker.state`` keeps its
+    single-replica meaning and mirrors the most recent transition of
+    ANY replica — per-replica truth lives here;
   * **fallback_window** — a bounded window of recent per-row validity
     (fast-path batches only), the drift signal ``DriftGuard`` watches:
     the LIFETIME fallback rate of a long-lived model dilutes a sudden
@@ -118,6 +124,8 @@ class ModelTelemetry:
         self._canary_fail = 0
         # -- drift signal: (rows, invalid_rows) per recent fast-path flush
         self._validity = collections.deque(maxlen=validity_window)
+        # -- per-replica dispatch accounting (scale-out)
+        self._replicas: dict[int, dict] = {}
 
     # ------------------------------------------------------------- recording
 
@@ -158,12 +166,42 @@ class ModelTelemetry:
             self._failed_requests += requests
             self._failed_rows += rows
 
-    def record_breaker_state(self, state: str, *, tripped: bool = False,
-                             probe: bool = False) -> None:
+    def _replica_locked(self, index: int) -> dict:
+        return self._replicas.setdefault(int(index), {
+            "flushes": 0,
+            "requests": 0,
+            "rows": 0,
+            "failures": 0,
+            "breaker_state": "closed",
+            "trips": 0,
+            "probes": 0,
+        })
+
+    def record_replica_flush(self, index: int, requests: int, rows: int) -> None:
+        """One fast-path flush served by replica ``index``."""
         with self._lock:
+            c = self._replica_locked(index)
+            c["flushes"] += 1
+            c["requests"] += requests
+            c["rows"] += rows
+
+    def record_replica_failure(self, index: int) -> None:
+        """One fast-path flush FAILED on replica ``index``."""
+        with self._lock:
+            self._replica_locked(index)["failures"] += 1
+
+    def record_breaker_state(self, state: str, *, tripped: bool = False,
+                             probe: bool = False, replica: int = 0) -> None:
+        with self._lock:
+            # model-level state keeps its pre-replica meaning: the most
+            # recent transition anywhere (exact for a single replica)
             self._breaker_state = state
             self._breaker_trips += int(tripped)
             self._breaker_probes += int(probe)
+            c = self._replica_locked(replica)
+            c["breaker_state"] = state
+            c["trips"] += int(tripped)
+            c["probes"] += int(probe)
 
     def record_degraded(self, requests: int, rows: int) -> None:
         """One flush served by the exact path under an open breaker."""
@@ -249,6 +287,10 @@ class ModelTelemetry:
                     "recompiles": self._recompiles,
                     "passed": self._canary_pass,
                     "failed": self._canary_fail,
+                },
+                "replicas": {
+                    str(i): dict(c)
+                    for i, c in sorted(self._replicas.items())
                 },
             }
         out["fallback_window"] = self.fallback_window()

@@ -40,6 +40,17 @@ One fused compiled step
   the family's row-validity computation and the multiclass argmax (or
   binary sign) into the same executable. K = 1 is just the smallest stack.
 
+Head-sharded extreme multiclass (``head_mesh=``)
+  In the extreme-OvR regime (K in the thousands) the stacked Hessian
+  (K, d, d) is the operand that outgrows one device. A ``head_mesh``
+  partitions the heads over the mesh's first axis via the family's
+  ``score_sharded`` path (shard_map over the fused per-shard primitive);
+  K is padded up to the axis size with argmax- and validity-neutral
+  heads, the per-row argmax and validity AND reduce across shards inside
+  the compiled step, and ``_finalize`` slices the score columns back to
+  the real K. f32 quadform/dense-RFF artifacts only (int8 + sharding
+  raises). Orthogonal to ``mesh``, which shards the EXACT path's SVs.
+
 Deferred synchronization
   ``submit`` returns an ``EngineResult`` holding device-resident outputs;
   nothing blocks until the caller materializes ``.values`` / ``.labels`` /
@@ -282,6 +293,8 @@ class SVMEngine:
         *,
         allow_fallback: bool = True,
         mesh: Mesh | None = None,
+        head_mesh: Mesh | None = None,
+        device=None,
         min_bucket: int = 32,
         max_batch: int = 8192,
         tile_config: TileConfig | None = None,
@@ -313,17 +326,40 @@ class SVMEngine:
         self.bucket_configs: dict[int, TileConfig] = {}
         self.stats = EngineStats()
         self._trace_lock = threading.Lock()   # guards bucket_configs
+        self._device = device                 # replica pinning (scale-out)
+        self.head_mesh = head_mesh
 
         # The artifact's arrays are closed over -> baked into the executable
         # as constants; only the padded batch is an argument (and is donated
-        # where the backend supports aliasing).
-        artifact = self.artifact
+        # where the backend supports aliasing). Under a head_mesh the heads
+        # are padded up to the mesh axis size and the family's sharded
+        # scorer partitions them across devices; the padded artifact is
+        # engine-internal (padding would change the content digest) and
+        # ``num_heads`` keeps the REAL head count — ``_finalize`` slices
+        # the score columns back down.
+        if head_mesh is not None:
+            pad = getattr(self._family, "pad_heads", None)
+            sharded = getattr(self._family, "score_sharded", None)
+            if pad is None or sharded is None:
+                raise NotImplementedError(
+                    f"family {self.family!r} has no head-sharded serving path"
+                )
+            shards = head_mesh.shape[head_mesh.axis_names[0]]
+            self._serve_artifact = pad(self.artifact, shards)
+        else:
+            self._serve_artifact = self.artifact
+        artifact = self._serve_artifact
 
         def _step(Zp):
             # Runs once per bucket (at trace time): resolve this bucket's
             # tuned tile sizes, so warmup() precompiles tuned variants.
             cfg = self._resolve_tile_config(Zp.shape[0])
-            scores, valid_row = self._family.score(artifact, Zp, config=cfg)
+            if head_mesh is not None:
+                scores, valid_row = self._family.score_sharded(
+                    artifact, Zp, mesh=head_mesh, config=cfg
+                )
+            else:
+                scores, valid_row = self._family.score(artifact, Zp, config=cfg)
             if self.multiclass:
                 labels = jnp.argmax(scores, axis=-1)       # fused argmax
             else:
@@ -383,6 +419,12 @@ class SVMEngine:
 
     # ------------------------------------------------------------- fast path
 
+    def _put(self, buf: np.ndarray):
+        """Host batch -> device array, honoring the replica's pinned device."""
+        if self._device is not None:
+            return jax.device_put(buf, self._device)
+        return jnp.asarray(buf)
+
     def submit(self, Z) -> EngineResult:
         """Enqueue one batch; returns without waiting for device compute."""
         Z = np.asarray(Z, dtype=np.float32)
@@ -396,7 +438,7 @@ class SVMEngine:
             bkt = bucket_size(m, self.min_bucket, self.max_batch)
             buf = np.zeros((bkt, self.d), dtype=np.float32)
             buf[:m] = rows                                  # host-side pad
-            out = self._step(jnp.asarray(buf))
+            out = self._step(self._put(buf))
             chunks.append((out, m))
         self.stats.record_batch(n, [(c[0][0].shape[0], c[1]) for c in chunks])
         # Z is only needed to re-score bound-violating rows; don't pin the
@@ -432,7 +474,7 @@ class SVMEngine:
             bkt = bucket_size(m, self.min_bucket, self.max_batch)
             buf = np.zeros((bkt, self.d), dtype=np.float32)
             buf[:m] = rows
-            out = self._slow_step(jnp.asarray(buf))
+            out = self._slow_step(self._put(buf))
             chunks.append((out, m))
         self.stats.record_degraded(n)
         return EngineResult(self, None, chunks)   # exact already: no re-score
@@ -539,6 +581,11 @@ class SVMEngine:
         scores = np.concatenate(
             [np.asarray(out[0])[:m] for out, m in chunks]
         ) if chunks else np.zeros((0, self.num_heads), np.float32)
+        if scores.shape[1] != self.num_heads:
+            # head-sharded serving pads K up to the mesh axis size; the
+            # padding heads are argmax-neutral, so labels are already
+            # correct — only the score columns need slicing back down.
+            scores = np.ascontiguousarray(scores[:, : self.num_heads])
         valid = np.concatenate([np.asarray(out[1])[:m] for out, m in chunks]) \
             if chunks else np.zeros((0,), bool)
         labels = np.concatenate([np.asarray(out[2])[:m] for out, m in chunks]) \

@@ -19,7 +19,15 @@ is broken:
     steady-state recompiles;
   * ``degraded_mode``: the breaker was genuinely open during the
     degraded measurement, every request was served (none shed), and
-    degraded serving added zero fast-path recompiles.
+    degraded serving added zero fast-path recompiles;
+  * ``scaleout``: with per-flush service time pinned, rows/s rises
+    (tolerance-)monotonically with replica count and the top count
+    strictly beats one replica, every replica actually served, nothing
+    failed or shed, zero steady-state recompiles on the replicated
+    path; the head-sharded K>=4096 serving kept exact argmax parity
+    with the unsharded reference. The section must be generated under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (>= 2
+    devices are required).
 
 Usage: ``python tools/check_bench_invariants.py [path-to-json]``
 Exits non-zero listing every violated invariant.
@@ -35,6 +43,7 @@ MIN_SIZE_RATIO = 3.0
 MIN_LABEL_PARITY = 0.99
 QUANT_ERR_REPRO_RTOL = 0.05     # measured == reported up to float noise
 QUANT_ERR_SLACK = 0.01          # int8 family error <= f32 error + this
+SCALEOUT_MONOTONIC_TOL = 0.9    # rows/s per count >= 0.9x best smaller count
 
 DEFAULT_PATH = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -193,6 +202,89 @@ def check_degraded(payload: dict, problems: list[str]) -> None:
         )
 
 
+def check_scaleout(payload: dict, problems: list[str]) -> None:
+    section = payload.get("scaleout")
+    if (
+        not section
+        or not section.get("replica_rows")
+        or not section.get("sharded")
+    ):
+        problems.append(
+            "scaleout: section missing or empty (generate under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+        return
+    meta = section.get("meta", {})
+    if meta.get("devices", 0) < 2:
+        problems.append(
+            f"scaleout: {meta.get('devices')!r} visible device(s) — run "
+            f"under XLA_FLAGS=--xla_force_host_platform_device_count=8"
+        )
+    rows = section["replica_rows"]
+    if len(rows) < 2:
+        problems.append(
+            f"scaleout: {len(rows)} replica count(s) measured, need >= 2"
+        )
+    best = None
+    for r in rows:
+        tag = f"scaleout[replicas={r.get('replicas')}]"
+        if r.get("steady_state_recompiles") != 0:
+            problems.append(
+                f"{tag}: steady_state_recompiles == "
+                f"{r.get('steady_state_recompiles')!r}, must be 0"
+            )
+        if not r.get("all_replicas_served"):
+            problems.append(
+                f"{tag}: not every replica served a flush "
+                f"(per_replica_flushes == {r.get('per_replica_flushes')!r})"
+            )
+        if r.get("failed_requests", 0) != 0 or r.get("shed_requests", 0) != 0:
+            problems.append(
+                f"{tag}: lost traffic — failed "
+                f"{r.get('failed_requests')!r}, shed {r.get('shed_requests')!r}"
+            )
+        rs = r.get("rows_s", 0)
+        if best is not None and rs < SCALEOUT_MONOTONIC_TOL * best:
+            problems.append(
+                f"{tag}: rows/s {rs} regressed below {SCALEOUT_MONOTONIC_TOL}x "
+                f"the best smaller count ({best})"
+            )
+        best = rs if best is None else max(best, rs)
+    if len(rows) >= 2 and rows[-1].get("rows_s", 0) <= rows[0].get("rows_s", 0):
+        problems.append(
+            f"scaleout: {rows[-1].get('replicas')} replicas "
+            f"({rows[-1].get('rows_s')} rows/s) did not beat 1 replica "
+            f"({rows[0].get('rows_s')} rows/s) — dispatch is not overlapping"
+        )
+    sh = section["sharded"]
+    if sh.get("K", 0) < 4096:
+        problems.append(
+            f"scaleout: sharded K == {sh.get('K')!r}, extreme-multiclass "
+            f"claim needs >= 4096"
+        )
+    if sh.get("shards", 0) < 2:
+        problems.append(
+            f"scaleout: sharded over {sh.get('shards')!r} shard(s), "
+            f"need >= 2 for a real partition"
+        )
+    if sh.get("argmax_parity") != 1.0:
+        problems.append(
+            f"scaleout: head-sharded argmax parity "
+            f"{sh.get('argmax_parity')!r} at K={sh.get('parity_K')!r}, "
+            f"must be exactly 1.0"
+        )
+    if not sh.get("scores_allclose"):
+        problems.append(
+            "scaleout: head-sharded scores diverged from the unsharded "
+            "reference beyond tolerance"
+        )
+    if sh.get("fallback_rate", 0) != 0:
+        problems.append(
+            f"scaleout: sharded bench traffic left the Eq 3.11 envelope "
+            f"(fallback_rate == {sh.get('fallback_rate')!r})"
+        )
+
+
 def main(argv: list[str]) -> int:
     path = argv[1] if len(argv) > 1 else DEFAULT_PATH
     with open(path) as f:
@@ -203,14 +295,15 @@ def main(argv: list[str]) -> int:
     check_runtime(payload, problems)
     check_overload(payload, problems)
     check_degraded(payload, problems)
+    check_scaleout(payload, problems)
     if problems:
         print(f"[bench-invariants] {len(problems)} violation(s) in {path}:")
         for p in problems:
             print(f"  FAIL {p}")
         return 1
     print(f"[bench-invariants] OK — model_size, family_compare, "
-          f"runtime_throughput, overload and degraded_mode invariants "
-          f"hold in {path}")
+          f"runtime_throughput, overload, degraded_mode and scaleout "
+          f"invariants hold in {path}")
     return 0
 
 
