@@ -49,6 +49,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import TileConfig, tuning
+from repro.kernels.fwht.kernel import (
+    fastfood_score_pallas,
+    fastfood_score_q8_pallas,
+)
+from repro.kernels.fwht.ref import fastfood_score_q8_ref, fastfood_score_ref
 from repro.kernels.quadform.kernel import (
     quadform_heads_pallas,
     quadform_heads_q8_pallas,
@@ -233,6 +238,50 @@ def quadform_heads_sharded(
     return fn(Z, M_all, V, c, b, gamma, msq)
 
 
+def quadform_heads_q8_sharded(
+    Z, M_q, col_scale, V, c, b, gamma, msq, *, mesh,
+    config: TileConfig | None = None,
+):
+    """``quadform_heads_q8`` with the K heads sharded over a device mesh.
+
+    Same partitioning as the f32 path — the int8 stacked Hessian AND its
+    per-(head, column) dequant scales carry the head axis, so both shard
+    together and the scale fold happens inside each device's fused
+    per-shard primitive (the scale epilogue never crosses the wire).
+    Int8 sharding is where head sharding pays most: the same mesh holds a
+    4x bigger K before the Hessian busts per-device memory.
+
+    K must divide the axis size (pad validity-neutral heads first).
+    Returns head-sharded (scores (n, K), valid (n, K)).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = mesh.axis_names[0]
+    shards = mesh.shape[axis]
+    k = M_q.shape[0]
+    if k % shards:
+        raise ValueError(
+            f"num_heads ({k}) must divide by mesh axis {axis!r} ({shards}); "
+            f"pad validity-neutral heads first"
+        )
+
+    def _local(Zb, Ms, cols, Vs, cs, bs, gs, ms):
+        scores, _, valid = quadform_heads_q8(
+            Zb, Ms, cols, Vs, cs, bs, gs, ms, config=config
+        )
+        return scores, valid
+
+    fn = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(), P(axis, None, None), P(axis, None), P(axis, None),
+                  P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(None, axis), P(None, axis)),
+    )
+    return fn(Z, M_q, col_scale, V, c, b, gamma, msq)
+
+
 # ------------------------------------------------------------ rff scoring
 
 
@@ -344,6 +393,203 @@ def rff_score_q8(
             config=config, interpret=_interpret(),
         )
     return rff_score_q8_xla(Z, W_q, w_scale, phase, weights_q, wt_scale, bias)
+
+
+def rff_score_q8_sharded(
+    Z, W_q, w_scale, phase, weights_q, wt_scale, bias,
+    *, mesh, config: TileConfig | None = None,
+):
+    """``rff_score_q8`` with the int8 (K, F) readout sharded over a mesh.
+
+    Partitioning mirrors ``rff_score_sharded``: the projection operands
+    (W_q, w_scale, phase) replicate — per-row work — while the readout
+    codes, their per-head scales and the bias shard over ``mesh``'s first
+    axis, so the dequant scale-epilogue folds inside each shard's fused
+    primitive. K must divide the axis size (pad heads first). Returns
+    head-sharded scores (n, K), spec ``P(None, axis)``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = mesh.axis_names[0]
+    shards = mesh.shape[axis]
+    k = weights_q.shape[0]
+    if k % shards:
+        raise ValueError(
+            f"num_heads ({k}) must divide by mesh axis {axis!r} ({shards}); "
+            f"pad validity-neutral heads first"
+        )
+
+    def _local(Zb, Wf, ws, ph, wq, wts, bs):
+        return rff_score_q8(Zb, Wf, ws, ph, wq, wts, bs, config=config)
+
+    fn = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(axis, None), P(axis), P(axis)),
+        out_specs=P(None, axis),
+    )
+    return fn(Z, W_q, w_scale, phase, weights_q, wt_scale, bias)
+
+
+# ------------------------------------------------------- fastfood scoring
+
+
+def fastfood_score_xla(Z, B, G, perm, scale, phase, weights, bias):
+    """Structured (Fastfood) RFF scoring under XLA: the log-depth
+    butterfly stages as reshape/concat ops, then one thin readout GEMM.
+    Algebraically identical to the Pallas kernel (same ``fwht`` body)."""
+    return fastfood_score_ref(Z, B, G, perm, scale, phase, weights, bias)
+
+
+def fastfood_score(
+    Z, B, G, perm, scale, phase, weights, bias,
+    *, config: TileConfig | None = None,
+):
+    """Dispatching fused Fastfood scores.
+
+    Z: (n, d); B/G/scale: (stacks, d') diagonal operators; perm:
+    (stacks, d') int; phase: (F,) with F = stacks*d'; weights: (K, F)
+    with the 2/F scaling folded at compile time; bias: (K,). Returns
+    (n, K). ``config=None`` resolves the ``fwht`` tuning family for this
+    (d, F, n) bucket.
+    """
+    if config is None:
+        config = tuning.lookup(
+            "fwht",
+            tuning.shape_key(
+                d=Z.shape[1], f=B.shape[0] * B.shape[1],
+                n=tuning.bucket(Z.shape[0]),
+            ),
+        )
+    if resolve() == "pallas":
+        return fastfood_score_pallas(
+            Z, B, G, perm, scale, phase, weights, bias,
+            config=config, interpret=_interpret(),
+        )
+    return fastfood_score_xla(Z, B, G, perm, scale, phase, weights, bias)
+
+
+def fastfood_score_q8_xla(
+    Z, b_q, g_q, perm, s_q, stack_scale, phase, weights_q, wt_scale, bias
+):
+    """Int8-operator Fastfood scoring under XLA: diagonals upcast in
+    registers (B is exact +-1 signs), the per-stack combined G*S scale
+    folds once per stack on the transform output, and the readout is an
+    int8->f32 GEMM with the per-head scale fold — the same epilogue
+    placement as the Pallas tile."""
+    return fastfood_score_q8_ref(
+        Z, b_q, g_q, perm, s_q, stack_scale, phase, weights_q, wt_scale, bias
+    )
+
+
+def fastfood_score_q8(
+    Z, b_q, g_q, perm, s_q, stack_scale, phase, weights_q, wt_scale, bias,
+    *, config: TileConfig | None = None,
+):
+    """Dispatching fused Fastfood scores off int8 operators.
+
+    b_q/g_q/s_q: (stacks, d') int8 (b_q holds exact +-1 signs);
+    stack_scale: (stacks,) f32 combined G*S row scales; weights_q: (K, F)
+    int8 with per-head scales wt_scale (K,); phase (F,) and bias (K,)
+    f32 (phase may arrive f16 — it is upcast at trace time). Returns
+    (n, K). ``config=None`` resolves the ``fwht_q8`` tuning family.
+    """
+    if config is None:
+        config = tuning.lookup(
+            "fwht_q8",
+            tuning.shape_key(
+                d=Z.shape[1], f=b_q.shape[0] * b_q.shape[1],
+                n=tuning.bucket(Z.shape[0]),
+            ),
+        )
+    if resolve() == "pallas":
+        return fastfood_score_q8_pallas(
+            Z, b_q, g_q, perm, s_q, stack_scale, phase,
+            weights_q, wt_scale, bias,
+            config=config, interpret=_interpret(),
+        )
+    return fastfood_score_q8_xla(
+        Z, b_q, g_q, perm, s_q, stack_scale, phase, weights_q, wt_scale, bias
+    )
+
+
+def fastfood_score_sharded(
+    Z, B, G, perm, scale, phase, weights, bias,
+    *, mesh, config: TileConfig | None = None,
+):
+    """``fastfood_score`` with the (K, F) readout sharded over a mesh.
+
+    The replication trade that makes dense-RFF head sharding worthwhile
+    (``rff_score_sharded``) is STRICTLY BETTER here: the replicated
+    per-shard work is the O(F log d') structured transform instead of an
+    O(F d) GEMM, while the sharded operand — the (K, F) readout, the
+    only O(K) memory in the artifact — is the same. K must divide the
+    axis size (pad heads first). Returns head-sharded scores (n, K).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = mesh.axis_names[0]
+    shards = mesh.shape[axis]
+    k = weights.shape[0]
+    if k % shards:
+        raise ValueError(
+            f"num_heads ({k}) must divide by mesh axis {axis!r} ({shards}); "
+            f"pad validity-neutral heads first"
+        )
+
+    def _local(Zb, Bs, Gs, ps, ss, ph, ws, bs):
+        return fastfood_score(Zb, Bs, Gs, ps, ss, ph, ws, bs, config=config)
+
+    fn = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P(), P(axis, None), P(axis)),
+        out_specs=P(None, axis),
+    )
+    return fn(Z, B, G, perm, scale, phase, weights, bias)
+
+
+def fastfood_score_q8_sharded(
+    Z, b_q, g_q, perm, s_q, stack_scale, phase, weights_q, wt_scale, bias,
+    *, mesh, config: TileConfig | None = None,
+):
+    """``fastfood_score_q8`` with the int8 readout sharded over a mesh.
+
+    The O(F) int8 diagonals and phase replicate; the int8 (K, F) readout
+    codes, their per-head scales and the bias partition over ``mesh``'s
+    first axis — the scale-epilogue folds per shard, exactly like
+    ``rff_score_q8_sharded``. K must divide the axis size (pad heads
+    first). Returns head-sharded scores (n, K).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = mesh.axis_names[0]
+    shards = mesh.shape[axis]
+    k = weights_q.shape[0]
+    if k % shards:
+        raise ValueError(
+            f"num_heads ({k}) must divide by mesh axis {axis!r} ({shards}); "
+            f"pad validity-neutral heads first"
+        )
+
+    def _local(Zb, bq, gq, ps, sq, ssc, ph, wq, wts, bs):
+        return fastfood_score_q8(
+            Zb, bq, gq, ps, sq, ssc, ph, wq, wts, bs, config=config
+        )
+
+    fn = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P(), P(),
+                  P(axis, None), P(axis), P(axis)),
+        out_specs=P(None, axis),
+    )
+    return fn(
+        Z, b_q, g_q, perm, s_q, stack_scale, phase, weights_q, wt_scale, bias
+    )
 
 
 # ------------------------------------------------------------- family axis

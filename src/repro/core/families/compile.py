@@ -89,8 +89,9 @@ def compile_model(
     around the support vectors (``fourier.holdout_sample`` —
     deterministic in ``seed``). ``family_opts`` maps family name -> extra
     compile kwargs (e.g. ``{"fourier": {"num_features": 4096,
-    "structured": True}}``); combinations a family rejects (structured
-    fourier has no int8 form) are skipped and noted in the report.
+    "structured": True}}``); combinations a family rejects are skipped
+    and noted in the report — the grid always carries a row (measured,
+    pruned or typed-skip) for every (family, dtype) cell.
     Raises ``ValueError`` listing every measured error when no candidate
     fits the budget — the caller's recourse is a bigger fourier basis, a
     looser budget, or serving the exact model.
@@ -136,6 +137,7 @@ def compile_model(
                 predicted = roofline.family_candidate_seconds(
                     name, dt, n=n_sample, d=d_in, k=int(k_heads),
                     num_features=opts.get(name, {}).get("num_features"),
+                    structured=bool(opts.get(name, {}).get("structured")),
                 )
             if (
                 cost_margin is not None

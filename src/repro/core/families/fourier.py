@@ -31,7 +31,6 @@ falls back per ARTIFACT, not per row: if the estimate violates
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -45,10 +44,13 @@ from repro.core.families.base import (
 )
 from repro.core.rbf import SVMModel, rbf_kernel
 from repro.kernels.common import TileConfig, tuning
+from repro.kernels.fwht import ref as _fwht_ref
 
 NAME = "fourier"
 TILE_KERNEL = "rff_score"
 TILE_KERNEL_Q8 = "rff_score_q8"
+TILE_KERNEL_FF = "fwht"
+TILE_KERNEL_FF_Q8 = "fwht_q8"
 
 DEFAULT_NUM_FEATURES = 1024
 DEFAULT_HOLDOUT_N = 256
@@ -74,19 +76,15 @@ def compile(                                                   # noqa: A001
 
     ``structured=True`` rounds ``num_features`` up to a whole number of
     Fastfood stacks (each 2^ceil(log2 d) wide). ``dtype="int8"``
-    quantizes the dense projection matrix (per-feature-row scales) and
-    the per-head readout weights (per-head scales); the held-out error
-    below is then measured on the QUANTIZED artifact, so the meta's
-    accuracy contract describes what actually ships. Fastfood's weights
-    are diagonal operators with O(F) footprint — nothing worth
-    quantizing — so ``structured=True`` with int8 is rejected.
+    quantizes the big operands — dense: the projection matrix
+    (per-feature-row scales) and the (K, F) readout (per-head scales);
+    structured: the G/S diagonals (per-stack scales, folded into one
+    combined multiplier), the readout, plus lossless narrowing of the
+    sign diagonal, permutation indices and phase — and the held-out
+    error below is then measured on the QUANTIZED artifact, so the
+    meta's accuracy contract describes what actually ships.
     """
     quantize.check_dtype(dtype)
-    if structured and dtype == quantize.INT8_DTYPE:
-        raise NotImplementedError(
-            "int8 fourier artifacts require the dense projection; the "
-            "Fastfood operators are O(F) diagonals with no footprint to win"
-        )
     X = np.asarray(svm.X, np.float32)
     gamma = float(svm.gamma)
     ay2, b, k, multiclass = stack_heads(svm)
@@ -158,12 +156,11 @@ def quantize_rff_artifact(
     readout weights go int8 with per-head scales (the feature axis is the
     readout's CONTRACTION axis, so any finer grouping could not fold);
     phase and bias stay f32. Measured quantization error vs the f32
-    parent rides in the meta when ``holdout`` is given.
+    parent rides in the meta when ``holdout`` is given. Fastfood-
+    projection artifacts route to ``quantize_fastfood_artifact``.
     """
-    if art.meta.get("projection") != "dense":
-        raise NotImplementedError(
-            "only dense-projection RFF artifacts have int8 variants"
-        )
+    if art.meta.get("projection") == "fastfood":
+        return quantize_fastfood_artifact(art, holdout=holdout)
     a = art.arrays
     w_q, w_scale = quantize.quantize_rows(a["W"])            # (F,d), (F,)
     wt_q, wt_scale = quantize.quantize_rows(a["weights"])    # (K,F), (K,)
@@ -173,6 +170,63 @@ def quantize_rff_artifact(
             "W": w_q, "W_scale": w_scale,
             "weights": wt_q, "weights_scale": wt_scale,
             "phase": a["phase"], "b": a["b"],
+        },
+        meta={**art.meta, "dtype": quantize.INT8_DTYPE},
+    )
+    if holdout is not None:
+        q_art = q_art.with_meta(
+            **quantize.measure_quant_error(art, q_art, holdout)
+        )
+    return q_art
+
+
+def quantize_fastfood_artifact(
+    art: CompiledArtifact, *, holdout=None
+) -> CompiledArtifact:
+    """Int8 variant of a structured (Fastfood) RFF artifact.
+
+    A Fastfood artifact has no O(F d) operand, so the footprint win comes
+    from narrowing EVERY array that scales with F or K:
+
+      * ``ff_b``: exact +-1 signs -> int8, lossless, no scale;
+      * ``ff_g`` / ``ff_scale``: int8 with one scale per stack row
+        (``quantize_rows``). Both diagonals multiply elementwise on the
+        same transform columns, so their per-stack scale PRODUCT folds
+        once per stack on the transform output (``ff_stack_scale``, the
+        analogue of rff_score_q8's post-GEMM fold) — the per-element int8
+        codes reconstruct the shape, one f32 multiplier per stack
+        reconstructs the magnitude;
+      * ``ff_perm``: int16 when d' fits (lossless narrowing);
+      * ``phase``: float16 — a phase offset into cos() needs ~1e-3 rad
+        absolute accuracy, which f16 delivers over [0, 2 pi);
+      * ``weights`` (K, F): int8 with per-head scales, exactly like the
+        dense readout; ``b`` stays f32 (K values, argmax-critical).
+
+    Codes and scales are computed on host in float64 with round-half-even
+    (see ``quantize``), so the serialized bytes are deterministic and
+    content-addressing survives. Measured quantization error vs the f32
+    parent rides in the meta when ``holdout`` is given.
+    """
+    if art.meta.get("projection") != "fastfood":
+        raise ValueError("not a fastfood-projection artifact")
+    a = art.arrays
+    g_q, g_scale = quantize.quantize_rows(a["ff_g"])         # (S,dd), (S,)
+    s_q, s_scale = quantize.quantize_rows(a["ff_scale"])     # (S,dd), (S,)
+    wt_q, wt_scale = quantize.quantize_rows(a["weights"])    # (K,F), (K,)
+    stack_scale = (
+        np.asarray(g_scale, np.float64) * np.asarray(s_scale, np.float64)
+    ).astype(np.float32)
+    q_art = CompiledArtifact(
+        family=art.family,
+        arrays={
+            "ff_b": quantize.quantize_signs(a["ff_b"]),
+            "ff_g": g_q,
+            "ff_scale": s_q,
+            "ff_stack_scale": jnp.asarray(stack_scale),
+            "ff_perm": quantize.compact_perm(a["ff_perm"]),
+            "phase": jnp.asarray(a["phase"], jnp.float16),
+            "weights": wt_q, "weights_scale": wt_scale,
+            "b": a["b"],
         },
         meta={**art.meta, "dtype": quantize.INT8_DTYPE},
     )
@@ -223,36 +277,12 @@ def _fastfood_arrays(rng, d: int, num_features: int, gamma: float):
     return arrays, f, {"projection": "fastfood", "dd": dd, "stacks": stacks}
 
 
-def fwht(x):
-    """Unnormalized Walsh-Hadamard transform over the last axis (a power of
-    two): H x with H entries +-1, H^T H = d I. O(d log d) adds."""
-    d = x.shape[-1]
-    shape = x.shape
-    y = x.reshape(-1, d)
-    h = 1
-    while h < d:
-        y = y.reshape(-1, d // (2 * h), 2, h)
-        y = jnp.concatenate([y[:, :, 0] + y[:, :, 1], y[:, :, 0] - y[:, :, 1]],
-                            axis=-1)
-        y = y.reshape(-1, d)
-        h *= 2
-    return y.reshape(shape)
-
-
-def _fastfood_project(Z, B, G, perm, scale):
-    """Z (n, d) -> (n, F) via the per-stack structured transform (no W)."""
-    dd = B.shape[-1]
-    n = Z.shape[0]
-    Zp = jnp.pad(Z, ((0, 0), (0, dd - Z.shape[1])))
-
-    def one_stack(b, g, p, s):
-        t = fwht(Zp * b[None, :])
-        t = t[:, p]
-        t = fwht(t * g[None, :])
-        return t * s[None, :]
-
-    proj = jax.vmap(one_stack, in_axes=(0, 0, 0, 0), out_axes=1)(B, G, perm, scale)
-    return proj.reshape(n, -1)                                 # (n, stacks*dd)
+# The transform arithmetic lives in ``repro.kernels.fwht.ref`` — ONE
+# butterfly implementation shared by the XLA formulation, the Pallas
+# kernel body, and the compile-time projection here. These aliases keep
+# the long-standing family-level names working.
+fwht = _fwht_ref.fwht
+_fastfood_project = _fwht_ref.fastfood_project
 
 
 # ---------------------------------------------------------------- serving
@@ -263,10 +293,11 @@ def score(
 ):
     """(scores (n, K), valid_rows (n,)).
 
-    Dense projection dispatches through ``backend.rff_score`` (fused
-    Pallas kernel on TPU); the Fastfood projection is an XLA-only
-    formulation — the FWHT's log-depth butterflies are XLA's job, and the
-    final weight contraction is one thin GEMM.
+    Every (projection, dtype) combination dispatches through the
+    ``core/backend`` seam: dense via ``rff_score`` / ``rff_score_q8``,
+    Fastfood via ``fastfood_score`` / ``fastfood_score_q8`` — the fused
+    FWHT Pallas kernel on TPU, the algebraically identical XLA
+    formulation elsewhere.
 
     ``valid_rows`` is the compile-time held-out verdict broadcast over
     the batch: there is no per-row envelope for RFF, so either every row
@@ -275,12 +306,17 @@ def score(
     """
     a = artifact.arrays
     if artifact.meta.get("projection") == "fastfood":
-        proj = _fastfood_project(
-            jnp.asarray(Z, jnp.float32), a["ff_b"], a["ff_g"],
-            a["ff_perm"], a["ff_scale"],
-        )
-        phi = jnp.cos(proj + a["phase"][None, :])
-        scores = phi @ a["weights"].T + a["b"][None, :]
+        if artifact.dtype == quantize.INT8_DTYPE:
+            scores = backend.fastfood_score_q8(
+                Z, a["ff_b"], a["ff_g"], a["ff_perm"], a["ff_scale"],
+                a["ff_stack_scale"], a["phase"],
+                a["weights"], a["weights_scale"], a["b"], config=config,
+            )
+        else:
+            scores = backend.fastfood_score(
+                Z, a["ff_b"], a["ff_g"], a["ff_perm"], a["ff_scale"],
+                a["phase"], a["weights"], a["b"], config=config,
+            )
     elif artifact.dtype == quantize.INT8_DTYPE:
         scores = backend.rff_score_q8(
             Z, a["W"], a["W_scale"], a["phase"],
@@ -299,15 +335,12 @@ def score(
 def pad_heads(artifact: CompiledArtifact, multiple: int) -> CompiledArtifact:
     """Pad the head axis up to a multiple of ``multiple`` (head sharding).
 
-    Only the (K, F) readout and (K,) bias carry a head axis; padding
-    heads get zero weights and the argmax-neutral ``PAD_HEAD_BIAS``.
+    Only the (K, F) readout, its per-head scales (int8) and the (K,)
+    bias carry a head axis; padding heads get zero weights (int8 zero
+    codes dequantize to exact zeros under any scale — scale 1 keeps the
+    epilogue fold harmless) and the argmax-neutral ``PAD_HEAD_BIAS``.
     RFF validity is a per-artifact verdict, so padding cannot perturb it.
     """
-    if artifact.dtype == quantize.INT8_DTYPE:
-        raise NotImplementedError(
-            "head padding/sharding supports f32 RFF artifacts; int8 head "
-            "sharding is future work"
-        )
     k = artifact.num_heads
     pad = (-k) % max(1, int(multiple))
     if pad == 0:
@@ -315,9 +348,17 @@ def pad_heads(artifact: CompiledArtifact, multiple: int) -> CompiledArtifact:
     a = artifact.arrays
     f = int(artifact.meta["num_features"])
     arrays = dict(a)
-    arrays["weights"] = jnp.concatenate(
-        [a["weights"], jnp.zeros((pad, f), jnp.float32)]
-    )
+    if artifact.dtype == quantize.INT8_DTYPE:
+        arrays["weights"] = jnp.concatenate(
+            [a["weights"], jnp.zeros((pad, f), jnp.int8)]
+        )
+        arrays["weights_scale"] = jnp.concatenate(
+            [a["weights_scale"], jnp.ones((pad,), jnp.float32)]
+        )
+    else:
+        arrays["weights"] = jnp.concatenate(
+            [a["weights"], jnp.zeros((pad, f), jnp.float32)]
+        )
     arrays["b"] = jnp.concatenate(
         [a["b"], jnp.full((pad,), PAD_HEAD_BIAS, jnp.float32)]
     )
@@ -333,26 +374,38 @@ def score_sharded(
 ):
     """``score`` with the (K, F) readout partitioned over ``mesh``.
 
-    Dense projection only: the projection is per-row work and is
-    replicated per shard (see ``backend.rff_score_sharded`` for the
-    trade), so a Fastfood artifact — whose entire point is a cheap
-    projection — has nothing to win and is rejected. The validity
-    verdict is per-artifact meta, computed OUTSIDE the sharded region.
+    All four (projection, dtype) combinations serve: the per-row
+    projection work — the dense GEMM, or Fastfood's O(F log d')
+    butterflies, strictly cheaper to replicate — runs per shard, while
+    the (K, F) readout, its int8 per-head scale epilogue and the bias
+    partition over the mesh's first axis. The validity verdict is
+    per-artifact meta, computed OUTSIDE the sharded region.
     """
-    if artifact.dtype == quantize.INT8_DTYPE:
-        raise NotImplementedError(
-            "head-sharded serving supports f32 RFF artifacts; int8 head "
-            "sharding is future work"
-        )
-    if artifact.meta.get("projection") == "fastfood":
-        raise NotImplementedError(
-            "head-sharded serving needs the dense projection; Fastfood's "
-            "readout is thin by construction — shard the dense variant"
-        )
     a = artifact.arrays
-    scores = backend.rff_score_sharded(
-        Z, a["W"], a["phase"], a["weights"], a["b"], mesh=mesh, config=config
-    )
+    if artifact.meta.get("projection") == "fastfood":
+        if artifact.dtype == quantize.INT8_DTYPE:
+            scores = backend.fastfood_score_q8_sharded(
+                Z, a["ff_b"], a["ff_g"], a["ff_perm"], a["ff_scale"],
+                a["ff_stack_scale"], a["phase"],
+                a["weights"], a["weights_scale"], a["b"],
+                mesh=mesh, config=config,
+            )
+        else:
+            scores = backend.fastfood_score_sharded(
+                Z, a["ff_b"], a["ff_g"], a["ff_perm"], a["ff_scale"],
+                a["phase"], a["weights"], a["b"], mesh=mesh, config=config,
+            )
+    elif artifact.dtype == quantize.INT8_DTYPE:
+        scores = backend.rff_score_q8_sharded(
+            Z, a["W"], a["W_scale"], a["phase"],
+            a["weights"], a["weights_scale"], a["b"],
+            mesh=mesh, config=config,
+        )
+    else:
+        scores = backend.rff_score_sharded(
+            Z, a["W"], a["phase"], a["weights"], a["b"],
+            mesh=mesh, config=config,
+        )
     valid = jnp.full(
         (scores.shape[0],), bool(artifact.meta.get("valid_globally", True))
     )
@@ -360,9 +413,11 @@ def score_sharded(
 
 
 def tile_lookup(artifact: CompiledArtifact, bucket: int) -> tuple[str, str]:
-    kernel = (
-        TILE_KERNEL_Q8 if artifact.dtype == quantize.INT8_DTYPE else TILE_KERNEL
-    )
+    q8 = artifact.dtype == quantize.INT8_DTYPE
+    if artifact.meta.get("projection") == "fastfood":
+        kernel = TILE_KERNEL_FF_Q8 if q8 else TILE_KERNEL_FF
+    else:
+        kernel = TILE_KERNEL_Q8 if q8 else TILE_KERNEL
     return kernel, tuning.shape_key(
         d=artifact.d, f=int(artifact.meta["num_features"]), n=bucket
     )

@@ -196,12 +196,11 @@ def pad_heads(artifact: CompiledArtifact, multiple: int) -> CompiledArtifact:
     materialization; ``meta.padded_heads`` records the served width.
     The padded artifact is engine-internal: it is never registered
     (padding would change the content digest).
+
+    Int8 artifacts pad the same way: zero int8 codes dequantize to exact
+    zeros under ANY scale, so padded M/v slabs carry scale 1 and the
+    scale-epilogue stays harmless on the padding.
     """
-    if artifact.dtype == quantize.INT8_DTYPE:
-        raise NotImplementedError(
-            "head padding/sharding supports f32 quadform artifacts; int8 "
-            "head sharding is future work"
-        )
     k, d = artifact.num_heads, artifact.d
     pad = (-k) % max(1, int(multiple))
     if pad == 0:
@@ -209,13 +208,24 @@ def pad_heads(artifact: CompiledArtifact, multiple: int) -> CompiledArtifact:
     a = artifact.arrays
     f32 = jnp.float32
     arrays = {
-        "M": jnp.concatenate([a["M"], jnp.zeros((pad, d, d), f32)]),
-        "v": jnp.concatenate([a["v"], jnp.zeros((pad, d), f32)]),
         "c": jnp.concatenate([a["c"], jnp.zeros((pad,), f32)]),
         "b": jnp.concatenate([a["b"], jnp.full((pad,), PAD_HEAD_BIAS, f32)]),
         "gamma": jnp.concatenate([a["gamma"], jnp.ones((pad,), f32)]),
         "msq": jnp.concatenate([a["msq"], jnp.zeros((pad,), f32)]),
     }
+    if artifact.dtype == quantize.INT8_DTYPE:
+        g = a["M_scale"].shape[-1]
+        arrays.update(
+            M=jnp.concatenate([a["M"], jnp.zeros((pad, d, d), jnp.int8)]),
+            M_scale=jnp.concatenate([a["M_scale"], jnp.ones((pad, g), f32)]),
+            v=jnp.concatenate([a["v"], jnp.zeros((pad, d), jnp.int8)]),
+            v_scale=jnp.concatenate([a["v_scale"], jnp.ones((pad,), f32)]),
+        )
+    else:
+        arrays.update(
+            M=jnp.concatenate([a["M"], jnp.zeros((pad, d, d), f32)]),
+            v=jnp.concatenate([a["v"], jnp.zeros((pad, d), f32)]),
+        )
     return CompiledArtifact(
         family=artifact.family,
         arrays=arrays,
@@ -235,17 +245,26 @@ def score_sharded(
     reduces across shards without a gather); the row-validity AND over
     heads is likewise a cross-shard reduction XLA inserts. The head
     count must already divide the axis size (``pad_heads``).
+
+    Int8 artifacts shard identically — the per-head column-scale
+    epilogue and the dequantized v fold inside each shard's fused
+    primitive, so no f32 copy of M ever materializes on any device.
     """
-    if artifact.dtype == quantize.INT8_DTYPE:
-        raise NotImplementedError(
-            "head-sharded serving supports f32 quadform artifacts; int8 "
-            "head sharding is future work"
-        )
     a = artifact.arrays
-    scores, valid = backend.quadform_heads_sharded(
-        Z, a["M"], a["v"], a["c"], a["b"], a["gamma"], a["msq"],
-        mesh=mesh, config=config,
-    )
+    if artifact.dtype == quantize.INT8_DTYPE:
+        col_scale = quantize.expand_group_scales(
+            a["M_scale"], artifact.d, int(artifact.meta["group_size"])
+        )                                                   # (K, d)
+        v = a["v"].astype(jnp.float32) * a["v_scale"][:, None]
+        scores, valid = backend.quadform_heads_q8_sharded(
+            Z, a["M"], col_scale, v, a["c"], a["b"], a["gamma"], a["msq"],
+            mesh=mesh, config=config,
+        )
+    else:
+        scores, valid = backend.quadform_heads_sharded(
+            Z, a["M"], a["v"], a["c"], a["b"], a["gamma"], a["msq"],
+            mesh=mesh, config=config,
+        )
     return scores, jnp.all(valid, axis=-1)
 
 

@@ -162,6 +162,28 @@ def quantize_rows(x) -> tuple[Array, Array]:
     return jnp.asarray(q.astype(np.int8)), jnp.asarray(scale.astype(np.float32))
 
 
+def quantize_signs(x) -> Array:
+    """Lossless int8 encoding of an exactly-{-1, +1} operand (Fastfood's
+    B diagonal). No scale: the values ARE representable, so this is a
+    cast with a guard — anything that is not a sign means the caller
+    grabbed the wrong array, not a quantization decision."""
+    x = np.asarray(x, np.float64)
+    if not np.all(np.abs(x) == 1.0):
+        raise ValueError("sign operand must be exactly +-1 everywhere")
+    return jnp.asarray(x.astype(np.int8))
+
+
+def compact_perm(perm) -> Array:
+    """Narrowest exact integer dtype for permutation indices: int16 when
+    every index fits (d' <= 32768 — any realistic feature width), int32
+    otherwise. Lossless either way; this is a serialized-bytes win, not
+    a quantization (the backend upcasts to int32 at trace time)."""
+    perm = np.asarray(perm)
+    if perm.size and perm.max() < np.iinfo(np.int16).max:
+        return jnp.asarray(perm.astype(np.int16))
+    return jnp.asarray(perm.astype(np.int32))
+
+
 def measure_quant_error(f32_art, q_art, Z) -> dict:
     """Scores of the quantized artifact vs its f32 parent on ``Z``.
 

@@ -45,6 +45,11 @@ DEFAULTS: dict[str, TileConfig] = {
     # optimal tilings diverge from the f32 kernels' on real hardware.
     "quadform_q8": TileConfig(block_n=512),
     "rff_score_q8": TileConfig(block_n=256),
+    # Structured (Fastfood) scoring: VPU butterfly stages dominate, so the
+    # Z-tile block is the only knob; the readout GEMM is thin. Separate
+    # family for the int8-operator variant (same rationale as above).
+    "fwht": TileConfig(block_n=256),
+    "fwht_q8": TileConfig(block_n=256),
 }
 
 # Canonical shape_key grammar: underscore-joined <dims><int> groups, e.g.

@@ -1,0 +1,21 @@
+from repro.kernels.fwht.kernel import (
+    fastfood_score_pallas,
+    fastfood_score_q8_pallas,
+)
+from repro.kernels.fwht.ref import (
+    fastfood_project,
+    fastfood_score_q8_ref,
+    fastfood_score_ref,
+    fwht,
+    fwht_xla,
+)
+
+__all__ = [
+    "fastfood_project",
+    "fastfood_score_pallas",
+    "fastfood_score_q8_pallas",
+    "fastfood_score_q8_ref",
+    "fastfood_score_ref",
+    "fwht",
+    "fwht_xla",
+]

@@ -1,0 +1,141 @@
+"""Reference (XLA) formulation of the fused Fastfood scoring path.
+
+The Fastfood construction (Le et al. 2013) replaces the dense RFF
+projection W (F, d) with ``stacks`` structured operators
+
+    V_s = S_s H G_s Pi_s H B_s        (each d' = 2^ceil(log2 d) wide)
+
+where B (signs), G (Gaussian) and S (chi row-norm correction) are
+diagonal, Pi is a permutation and H is the (unnormalized) Hadamard
+matrix applied via the Walsh-Hadamard transform — O(d' log d') adds per
+row instead of O(d'^2) multiplies. These functions are the algebraic
+ground truth the Pallas kernel in ``kernel.py`` must match: the backend
+dispatches to them on CPU/GPU (``repro.core.backend.fastfood_score*``)
+and the tests assert Pallas-vs-XLA agreement through them.
+
+One transform, two schedules: ``fwht`` is the radix-2 butterfly the
+Pallas kernel unrolls on VMEM-resident tiles (VPU adds); ``fwht_xla`` is
+the same H x through Sylvester's Kronecker factorization as two small
+dense GEMMs, which XLA's CPU/GPU matmul paths run ~2x faster than the
+concat-per-stage butterfly (each butterfly stage materializes the full
+(n, d') array). ``fastfood_project`` — the XLA dispatch target and the
+oracle the Pallas parity tests compare against — uses ``fwht_xla``; the
+tests pin both formulations to the explicit Hadamard matrix.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def fwht(x):
+    """Unnormalized Walsh-Hadamard transform over the last axis (a power
+    of two): H x with H entries +-1, H^T H = d I. O(d log d) adds.
+
+    The loop is the classic radix-2 butterfly vectorized as a
+    reshape/concat per stage: at half-size h the vector splits into
+    (d // 2h) blocks of [lo | hi] pairs that recombine as
+    [lo + hi | lo - hi]. ``d`` is static, so the log2(d) stages unroll
+    at trace time — inside a Pallas kernel each stage is VPU adds on a
+    resident tile.
+    """
+    d = x.shape[-1]
+    shape = x.shape
+    y = x.reshape(-1, d)
+    h = 1
+    while h < d:
+        y = y.reshape(-1, d // (2 * h), 2, h)
+        y = jnp.concatenate([y[:, :, 0] + y[:, :, 1], y[:, :, 0] - y[:, :, 1]],
+                            axis=-1)
+        y = y.reshape(-1, d)
+        h *= 2
+    return y.reshape(shape)
+
+
+@lru_cache(maxsize=None)
+def _hadamard(m: int) -> np.ndarray:
+    """Sylvester Hadamard matrix H_m (m a power of two), +-1 entries."""
+    H = np.array([[1.0]], dtype=np.float32)
+    while H.shape[0] < m:
+        H = np.block([[H, H], [H, -H]])
+    return H
+
+
+def fwht_xla(x):
+    """The same H x as ``fwht`` on an XLA-friendly schedule.
+
+    Sylvester's construction gives H_{2^k} = H_{2^a} (x) H_{2^b} for any
+    a + b = k, so with the last axis reshaped to (2^a, 2^b) the transform
+    is Ha @ X @ Hb — two dense GEMMs against tiny +-1 matrices (balanced
+    split: 32x32 at d' = 1024). O(d' (2^a + 2^b)) multiply-adds per row
+    instead of the butterfly's O(d' log d') adds, but it runs through the
+    optimized matmul path with no per-stage materialization, which is the
+    faster trade everywhere except inside the Pallas kernel.
+    """
+    d = x.shape[-1]
+    k = max(0, d.bit_length() - 1)
+    da = 1 << (k - k // 2)
+    db = d // da
+    Ha = jnp.asarray(_hadamard(da))
+    Hb = jnp.asarray(_hadamard(db))
+    y = x.reshape(-1, da, db)
+    y = jnp.einsum("ab,nbc,cd->nad", Ha, y, Hb)
+    return y.reshape(x.shape)
+
+
+def fastfood_project(Z, B, G, perm, scale):
+    """Z (n, d) -> (n, F) via the per-stack structured transform (no W).
+
+    B/G/scale: (stacks, d') diagonals; perm: (stacks, d') int. Z is
+    zero-padded to d' (exact: the B sign flip of a zero column is zero).
+    """
+    dd = B.shape[-1]
+    n = Z.shape[0]
+    Zp = jnp.pad(Z, ((0, 0), (0, dd - Z.shape[1])))
+
+    def one_stack(b, g, p, s):
+        t = fwht_xla(Zp * b[None, :])
+        t = jnp.take(t, p, axis=1)
+        t = fwht_xla(t * g[None, :])
+        return t * s[None, :]
+
+    proj = jax.vmap(one_stack, in_axes=(0, 0, 0, 0), out_axes=1)(B, G, perm, scale)
+    return proj.reshape(n, -1)                                 # (n, stacks*dd)
+
+
+def fastfood_score_ref(Z, B, G, perm, scale, phase, weights, bias):
+    """Structured-projection RFF scores: (n, K) = cos(proj + phase) @ W^T + b.
+
+    The f32 oracle for both backend paths: ``fastfood_project`` then the
+    thin per-head readout, with the 2/F feature scaling already folded
+    into ``weights`` at compile time.
+    """
+    proj = fastfood_project(jnp.asarray(Z, jnp.float32), B, G, perm, scale)
+    phi = jnp.cos(proj + phase[None, :])
+    return phi @ weights.T + bias[None, :]
+
+
+def fastfood_score_q8_ref(
+    Z, b_q, g_q, perm, s_q, stack_scale, phase, weights_q, wt_scale, bias
+):
+    """Int8-operator oracle: dequantize everything to f32, then score.
+
+    ``stack_scale`` is the per-stack product of the G and S row scales —
+    both diagonals multiply elementwise on the SAME output columns
+    (fwht(t * g_q * gs) * s_q * ss == (fwht(t * g_q) * s_q) * (gs * ss)),
+    so one fold per stack on the transform output reconstructs both.
+    """
+    B = b_q.astype(jnp.float32)                                # signs, exact
+    G = g_q.astype(jnp.float32)
+    S = s_q.astype(jnp.float32) * stack_scale[:, None]
+    proj = fastfood_project(
+        jnp.asarray(Z, jnp.float32), B, G, perm.astype(jnp.int32), S
+    )
+    phi = jnp.cos(proj + phase.astype(jnp.float32)[None, :])
+    scores = (phi @ weights_q.astype(jnp.float32).T) * wt_scale[None, :]
+    return scores + bias[None, :]

@@ -114,9 +114,38 @@ def rff_tile_seconds(cfg, *, n: int, d: int, f: int, k: int,
     return predict_seconds(flops, stream + io)
 
 
+def fwht_tile_seconds(cfg, *, n: int, d: int, f: int, k: int,
+                      weight_bytes: int = 4) -> float:
+    """Analytic cost of the fused Fastfood step (FWHT stacks + readout).
+
+    Per row: each of the ``stacks`` = F / d' stacks runs two d'-wide
+    Walsh-Hadamard transforms (log2(d') add stages each) plus the three
+    diagonal multiplies and permutation — ~2 d' (log2 d' + 2) FLOPs per
+    stack, i.e. O(F log d') in place of the dense path's O(F d) — then
+    the same 2 F K readout GEMM as dense RFF. Streamed weights are the
+    O(F) diagonals (4 arrays of F elements at ``weight_bytes``, plus the
+    f32 phase) and the (K, F) readout, re-streamed once per row tile;
+    ``weight_bytes=1`` models the int8 variant. The structured prior
+    undercuts ``rff_tile_seconds`` wherever log2(d') << d — the
+    compile-search ranking the paper's loglinear claim turns into.
+    """
+    blocks = _row_blocks(n, getattr(cfg, "block_n", None) if cfg else None)
+    dd = 1 << max(1, (d - 1).bit_length())                 # next pow2 >= d
+    stacks = -(-int(f) // dd)
+    fp = stacks * dd                                       # F rounded to stacks
+    log_dd = max(1, dd.bit_length() - 1)
+    flops = float(n) * (2.0 * stacks * dd * (log_dd + 2) + 2.0 * fp * k)
+    stream = float(blocks) * (
+        fp * (3.0 * weight_bytes + 4.0)                    # B/G/S diagonals + phase
+        + k * fp * weight_bytes                            # readout
+    )
+    io = 4.0 * (n * d + n * k)
+    return predict_seconds(flops, stream + io)
+
+
 def family_candidate_seconds(
     family: str, dtype: str, *, n: int, d: int, k: int,
-    num_features: int | None = None, cfg=None,
+    num_features: int | None = None, structured: bool = False, cfg=None,
 ) -> float | None:
     """Predicted serving seconds for one ``compile_model`` candidate.
 
@@ -128,6 +157,8 @@ def family_candidate_seconds(
         return quadform_tile_seconds(cfg, n=n, d=d, k=k, weight_bytes=wb)
     if family == "fourier":
         f = int(num_features) if num_features else 1024  # fourier default
+        if structured:
+            return fwht_tile_seconds(cfg, n=n, d=d, f=f, k=k, weight_bytes=wb)
         return rff_tile_seconds(cfg, n=n, d=d, f=f, k=k, weight_bytes=wb)
     return None
 

@@ -307,7 +307,9 @@ def test_compile_model_treats_int8_as_candidates():
     assert eng.predict_labels(np.asarray(m.X[:9])).shape == (9,)
 
 
-def test_compile_model_skips_structured_fourier_int8():
+def test_compile_model_enumerates_structured_fourier_int8():
+    # Regression (ISSUE 8): the structured-Fastfood int8 candidate used to
+    # be a typed-skip row; it is now a first-class measured candidate.
     m = _svm(19, d=6, n_sv=30)
     art = compile_model(
         m, Budget(max_err=10.0), seed=1,
@@ -315,13 +317,34 @@ def test_compile_model_skips_structured_fourier_int8():
         family_opts={"fourier": {"structured": True, "num_features": 32}},
     )
     rep = art.meta["compile_report"]
-    skipped = [r for r in rep["families"] if "skipped" in r]
-    assert len(skipped) == 1 and skipped[0]["dtype"] == "int8"
-    assert art.dtype == "float32"
+    assert not [r for r in rep["families"] if "skipped" in r]
+    q8_rows = [r for r in rep["families"] if r.get("dtype") == "int8"]
+    assert len(q8_rows) == 1 and "latency_ms" in q8_rows[0]
+    assert "quant_mean_abs_err" in q8_rows[0]
 
 
-def test_fourier_structured_int8_raises():
-    with pytest.raises(NotImplementedError, match="dense"):
-        get_family("fourier").compile(
-            _svm(20), structured=True, dtype="int8", num_features=32
-        )
+def test_compile_model_grid_has_row_for_every_cell():
+    # Every (family, dtype) cell must appear in the report exactly once —
+    # measured, pruned_by_cost, or typed skip — never a silent hole.
+    m = _svm(21, d=8, n_sv=40, heads=3)
+    art = compile_model(
+        m, Budget(max_err=10.0), seed=3,
+        family_opts={"fourier": {"structured": True, "num_features": 32}},
+    )
+    rows = [
+        (r["family"], r.get("dtype"))
+        for r in art.meta["compile_report"]["families"]
+    ]
+    expected = [(f, dt) for f in FAMILIES for dt in ("float32", "int8")]
+    assert sorted(rows) == sorted(expected)
+
+
+def test_fourier_structured_int8_compiles_and_serves():
+    art = get_family("fourier").compile(
+        _svm(20), structured=True, dtype="int8", num_features=32
+    )
+    assert art.dtype == "int8"
+    assert art.meta["projection"] == "fastfood"
+    assert "quant_mean_abs_err" in art.meta
+    assert art.arrays["ff_g"].dtype == jnp.int8
+    assert art.arrays["weights"].dtype == jnp.int8

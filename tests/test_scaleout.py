@@ -283,16 +283,103 @@ def test_head_sharded_fourier_matches_unsharded():
     )
 
 
-def test_head_sharding_rejects_int8_and_fastfood():
+def test_head_sharded_int8_quadform_matches_unsharded():
+    # Flipped from the PR-7 rejection test: int8 quadform now shards.
     mesh = _head_mesh()
-    m = _svm_mc(9, k=4)
+    shards = mesh.shape["heads"]
+    k = 2 * shards + 1 if shards > 1 else 5  # force padding when sharded
+    m = _svm_mc(9, k=k)
     q = maclaurin.compile(m, dtype="int8")
-    with pytest.raises(NotImplementedError):
-        SVMEngine(q, head_mesh=mesh, **ENGINE_OPTS)
-    ff = fourier.compile(_svm(9, scale=0.4), num_features=256, structured=True)
-    Z = jnp.asarray(_rows(np.random.default_rng(0), 8))
-    with pytest.raises(NotImplementedError):
-        fourier.score_sharded(ff, Z, mesh=mesh)
+    ref = SVMEngine(q, **ENGINE_OPTS)
+    shd = SVMEngine(q, head_mesh=mesh, **ENGINE_OPTS)
+    Z = _rows(np.random.default_rng(0), 16)
+    r_ref = ref.submit(Z)
+    r_shd = shd.submit(Z)
+    np.testing.assert_allclose(
+        np.asarray(r_shd.values), np.asarray(r_ref.values),
+        rtol=1e-4, atol=1e-5,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r_shd.labels), np.asarray(r_ref.labels)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r_shd.valid), np.asarray(r_ref.valid)
+    )
+
+
+def test_head_sharded_fastfood_matches_unsharded():
+    # Flipped from the PR-7 rejection test: structured fourier now shards,
+    # in both dtypes.
+    mesh = _head_mesh()
+    shards = mesh.shape["heads"]
+    k = 2 * shards + 1 if shards > 1 else 5
+    m = _svm_mc(9, k=k, scale=0.4)
+    for dtype in ("float32", "int8"):
+        art = fourier.compile(
+            m, num_features=256, structured=True, dtype=dtype
+        )
+        ref = SVMEngine(art, **ENGINE_OPTS)
+        shd = SVMEngine(art, head_mesh=mesh, **ENGINE_OPTS)
+        Z = _rows(np.random.default_rng(1), 16, scale=0.25)
+        r_ref = ref.submit(Z)
+        r_shd = shd.submit(Z)
+        np.testing.assert_allclose(
+            np.asarray(r_shd.values), np.asarray(r_ref.values),
+            rtol=1e-4, atol=1e-5,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_shd.labels), np.asarray(r_ref.labels)
+        )
+
+
+def _synthetic_fastfood_artifact(k, d=32, num_features=64, seed=0,
+                                 dtype="float32"):
+    """A fastfood artifact with K heads built directly from arrays —
+    compiling a real K=4096 one-vs-rest model would dwarf the test."""
+    rng = np.random.default_rng(seed)
+    from repro.core.families.base import CompiledArtifact, base_meta
+
+    arrays, f, proj_meta = fourier._fastfood_arrays(rng, d, num_features, 0.5)
+    arrays = dict(arrays)
+    arrays["phase"] = jnp.asarray(
+        rng.uniform(0, 2 * np.pi, (f,)).astype(np.float32)
+    )
+    arrays["weights"] = jnp.asarray(
+        (rng.standard_normal((k, f)) * 0.05).astype(np.float32)
+    )
+    arrays["b"] = jnp.asarray((rng.standard_normal(k) * 0.1).astype(np.float32))
+    art = CompiledArtifact(
+        family="fourier",
+        arrays=arrays,
+        meta=base_meta(
+            d=d, num_heads=k, multiclass=True, kind="rff",
+            validity="global", num_features=f, seed=seed, **proj_meta,
+        ),
+    )
+    if dtype == "int8":
+        art = fourier.quantize_fastfood_artifact(art)
+    return art
+
+
+@pytest.mark.parametrize("dtype", ["float32", "int8"])
+def test_head_sharded_fastfood_argmax_parity_at_k4096(dtype):
+    """ISSUE 8 acceptance: extreme-multiclass (K=4096) Fastfood serving
+    under head_mesh keeps exact argmax parity with the unsharded path."""
+    mesh = _head_mesh()
+    art = _synthetic_fastfood_artifact(4096, dtype=dtype)
+    Z = _rows(np.random.default_rng(2), 24, d=32)
+    ref = SVMEngine(art, **ENGINE_OPTS)
+    shd = SVMEngine(art, head_mesh=mesh, **ENGINE_OPTS)
+    r_ref = ref.submit(Z)
+    r_shd = shd.submit(Z)
+    assert np.asarray(r_shd.values).shape == (24, 4096)
+    np.testing.assert_allclose(
+        np.asarray(r_shd.values), np.asarray(r_ref.values),
+        rtol=1e-4, atol=1e-5,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r_shd.labels), np.asarray(r_ref.labels)
+    )
 
 
 def test_runtime_serves_head_sharded_replicas():

@@ -23,15 +23,32 @@ import os
 import subprocess
 import sys
 
+# (label, family, dtype, extra compile opts). The label keys the digest
+# comparison — "fourier" appears twice (dense and structured), and the
+# structured-Fastfood int8 layout (sign/int8/int16/f16 narrowing) has its
+# own cross-process bit-determinism to prove.
 CASES = [
-    ("maclaurin", "float32"), ("maclaurin", "int8"),
-    ("poly2", "float32"), ("poly2", "int8"),
-    ("fourier", "float32"), ("fourier", "int8"),
+    ("maclaurin", "maclaurin", "float32", {}),
+    ("maclaurin-q8", "maclaurin", "int8", {}),
+    ("poly2", "poly2", "float32", {}),
+    ("poly2-q8", "poly2", "int8", {}),
+    ("fourier", "fourier", "float32", {}),
+    ("fourier-q8", "fourier", "int8", {}),
+    ("fastfood", "fourier", "float32", {"structured": True}),
+    ("fastfood-q8", "fourier", "int8", {"structured": True}),
+]
+
+# f32/int8 variant pairs whose digests must stay DISTINCT registry entries.
+VARIANT_PAIRS = [
+    ("maclaurin", "maclaurin-q8"),
+    ("poly2", "poly2-q8"),
+    ("fourier", "fourier-q8"),
+    ("fastfood", "fastfood-q8"),
 ]
 
 
 def emit() -> None:
-    """Child mode: print '<family> <dtype> <digest>' per candidate."""
+    """Child mode: print '<label> <digest>' per candidate."""
     import numpy as np
     import jax.numpy as jnp
 
@@ -47,11 +64,11 @@ def emit() -> None:
         X=jnp.asarray(X), alpha_y=jnp.asarray(ay),
         b=b, gamma=jnp.float32(0.8 * float(gamma_max(jnp.asarray(X)))),
     )
-    for family, dtype in CASES:
+    for label, family, dtype, opts in CASES:
         art = get_family(family).compile(
-            svm, dtype=dtype, seed=7, num_features=128
+            svm, dtype=dtype, seed=7, num_features=128, **opts
         )
-        print(f"{family} {dtype} {art.digest()}")
+        print(f"{label} {art.digest()}")
 
 
 def main() -> int:
@@ -61,34 +78,34 @@ def main() -> int:
     extra = env.get("PYTHONPATH", "")
     env["PYTHONPATH"] = src + (os.pathsep + extra if extra else "")
 
-    def run() -> dict[tuple[str, str], str]:
+    def run() -> dict[str, str]:
         out = subprocess.run(
             [sys.executable, os.path.abspath(__file__), "--emit"],
             check=True, capture_output=True, text=True, env=env,
         ).stdout
         digests = {}
         for line in out.strip().splitlines():
-            family, dtype, digest = line.split()
-            digests[(family, dtype)] = digest
+            label, digest = line.split()
+            digests[label] = digest
         return digests
 
     first, second = run(), run()
     problems = []
-    for case in CASES:
-        if first[case] != second[case]:
+    for label, _, _, _ in CASES:
+        if first[label] != second[label]:
             problems.append(
-                f"{case}: digest differs across processes "
-                f"({first[case][:16]} vs {second[case][:16]})"
+                f"{label}: digest differs across processes "
+                f"({first[label][:16]} vs {second[label][:16]})"
             )
-    for family in {f for f, _ in CASES}:
-        if first.get((family, "float32")) == first.get((family, "int8")):
-            problems.append(f"{family}: int8 digest equals f32 digest")
+    for f32_label, q8_label in VARIANT_PAIRS:
+        if first.get(f32_label) == first.get(q8_label):
+            problems.append(f"{f32_label}: int8 digest equals f32 digest")
     if problems:
         print(f"[determinism] {len(problems)} violation(s):")
         for p in problems:
             print(f"  FAIL {p}")
         return 1
-    print(f"[determinism] OK — {len(CASES)} (family, dtype) artifacts "
+    print(f"[determinism] OK — {len(CASES)} (family, dtype, opts) artifacts "
           f"compile to identical digests in two separate processes")
     return 0
 

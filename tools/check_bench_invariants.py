@@ -10,6 +10,10 @@ is broken:
     reproduces on the deterministic holdout (measured-within-report);
   * ``family_compare``: every family was measured at both dtypes, and
     quantization does not blow up the family's measured error;
+  * ``fastfood``: the full (d, variant, dtype) grid is present, the
+    structured (FWHT) rows beat the dense-RFF rows/s at d=784, the int8
+    structured rows keep the >= 3x size ratio and >= 0.99 label parity,
+    and no row added steady-state recompiles;
   * ``runtime_throughput``: coalescing added ZERO steady-state
     recompiles;
   * ``overload``: the burst past capacity really shed (typed, with a
@@ -103,6 +107,55 @@ def check_family_compare(payload: dict, problems: list[str]) -> None:
                     f"{tag}: int8 mean error {q8['mean_abs_err']:.4g} blows "
                     f"past f32 {f32['mean_abs_err']:.4g} + {QUANT_ERR_SLACK}"
                 )
+
+
+def check_fastfood(payload: dict, problems: list[str]) -> None:
+    section = payload.get("fastfood")
+    if not section or not section.get("rows"):
+        problems.append("fastfood: section missing or empty")
+        return
+    rows = section["rows"]
+    by_key = {(r["d"], r["variant"], r["dtype"]): r for r in rows}
+    dims = section.get("dims") or sorted({r["d"] for r in rows})
+    variants = ("structured", "dense", "quadform")
+    for d in dims:
+        for variant in variants:
+            for dtype in ("float32", "int8"):
+                tag = f"fastfood[{variant} d={d} {dtype}]"
+                r = by_key.get((d, variant, dtype))
+                if r is None:
+                    problems.append(f"{tag}: row missing from the grid")
+                    continue
+                if r.get("steady_state_recompiles") != 0:
+                    problems.append(
+                        f"{tag}: steady_state_recompiles == "
+                        f"{r.get('steady_state_recompiles')!r}, must be 0"
+                    )
+                if dtype == "int8":
+                    if r.get("label_parity_vs_f32", 0) < MIN_LABEL_PARITY:
+                        problems.append(
+                            f"{tag}: label parity vs f32 "
+                            f"{r.get('label_parity_vs_f32')!r} "
+                            f"< {MIN_LABEL_PARITY}"
+                        )
+                    if variant != "quadform" and (
+                        r.get("size_ratio_vs_f32") or 0
+                    ) < MIN_SIZE_RATIO:
+                        problems.append(
+                            f"{tag}: int8 size ratio "
+                            f"{r.get('size_ratio_vs_f32')!r} "
+                            f"< {MIN_SIZE_RATIO}"
+                        )
+    # the paper's claim: at MNIST-sized d the structured projection beats
+    # the dense RFF GEMM in steady-state throughput
+    if 784 in dims:
+        st = by_key.get((784, "structured", "float32"))
+        dn = by_key.get((784, "dense", "float32"))
+        if st and dn and st["rows_per_s"] <= dn["rows_per_s"]:
+            problems.append(
+                f"fastfood[d=784 float32]: structured {st['rows_per_s']} "
+                f"rows/s did not beat dense RFF {dn['rows_per_s']} rows/s"
+            )
 
 
 def check_runtime(payload: dict, problems: list[str]) -> None:
@@ -292,6 +345,7 @@ def main(argv: list[str]) -> int:
     problems: list[str] = []
     check_model_size(payload, problems)
     check_family_compare(payload, problems)
+    check_fastfood(payload, problems)
     check_runtime(payload, problems)
     check_overload(payload, problems)
     check_degraded(payload, problems)
@@ -301,7 +355,7 @@ def main(argv: list[str]) -> int:
         for p in problems:
             print(f"  FAIL {p}")
         return 1
-    print(f"[bench-invariants] OK — model_size, family_compare, "
+    print(f"[bench-invariants] OK — model_size, family_compare, fastfood, "
           f"runtime_throughput, overload, degraded_mode and scaleout "
           f"invariants hold in {path}")
     return 0
