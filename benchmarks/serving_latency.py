@@ -91,6 +91,8 @@ from repro.kernels.common import TileConfig, autotune, tuning
 from repro.serve.runtime import (
     ENGINE_STEP,
     FaultInjector,
+    MetricsRegistry,
+    Observability,
     Runtime,
     RuntimeOverloaded,
 )
@@ -198,6 +200,19 @@ SCALEOUT_PARITY_K = 16          # small-K argmax parity vs unsharded reference
 SCALEOUT_SHARDED_D = 32
 SCALEOUT_SHARDED_BATCH = 256
 SCALEOUT_SHARDED_REPEATS = 10
+
+# observability (PR 9): the tracing tax. Identical open-loop workloads
+# through an untraced Runtime (obs=False) and a traced one (private
+# Observability, so the process-default registry stays clean). The
+# flush wait (max_wait_us) dominates both p50s, so the span-recording
+# microseconds must vanish into it — CI gates overhead_p50 <= 1.05x.
+# The traced run also re-proves three-way conservation: telemetry
+# counters, span counts and the Prometheus rendering must agree on
+# every request's verdict.
+OBS_CLIENTS = 8
+OBS_REQS_PER_CLIENT = 60
+OBS_REQ_ROWS = 4
+OBS_DRIVE_REPEATS = 5
 
 SMOKE = False           # set by --smoke: same sections, fewer repeats
 
@@ -1206,6 +1221,161 @@ def bench_scaleout() -> dict:
     }
 
 
+def bench_observability() -> dict:
+    """Traced vs untraced serving on identical closed-loop traffic.
+
+    Two fresh runtimes serve the same (seeded) workload: one with
+    observability disabled (``obs=False`` — no spans, no metric
+    mirroring), one fully traced onto a private registry. Clients are
+    CLOSED-LOOP (one outstanding request each): the p50 ratio then
+    measures the per-request cost of tracing itself. An open-loop burst
+    would instead measure how queueing amplifies any slowdown on a
+    saturated box — real, but a property of the load, not the tracer
+    (throughput impact stays visible in ``rows_s``). Request p50/p99
+    come from each runtime's own latency window, so the comparison is
+    request-level, not wall-clock. The traced run's accounting is then
+    checked three ways — telemetry counters, tracer span counts,
+    Prometheus rendering — and the booleans land in the meta for
+    ``check_bench_invariants`` to gate.
+    """
+    reqs = 10 if SMOKE else OBS_REQS_PER_CLIENT
+
+    def drive(obs):
+        m = _model()
+        art = families.maclaurin.compile(m)
+        rt = Runtime(
+            max_wait_us=RUNTIME_MAX_WAIT_US,
+            flush_rows=RUNTIME_FLUSH_ROWS,
+            engine_opts=dict(min_bucket=32, max_batch=1024),
+            obs=obs,
+        )
+        rt.publish("primary", art, exact=m)
+        rt.warmup("primary")
+        digest = rt.registry.resolve("primary")
+        rng = np.random.default_rng(11)
+        work = [
+            [rng.standard_normal((OBS_REQ_ROWS, D)).astype(np.float32) * 0.3
+             for _ in range(reqs)]
+            for _ in range(OBS_CLIENTS)
+        ]
+
+        def client(batches):
+            for Z in batches:
+                rt.submit("primary", Z).result().values
+
+        threads = [threading.Thread(target=client, args=(w,)) for w in work]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        elapsed = time.perf_counter() - t0
+        rt.close()                       # drain; every verdict is final
+        st = rt.stats(digest)
+        return rt, st, digest, elapsed
+
+    total_reqs = OBS_CLIENTS * reqs
+    total_rows = total_reqs * OBS_REQ_ROWS
+
+    def row(mode, st, elapsed):
+        return {
+            "mode": mode,
+            "requests": total_reqs,
+            "rows_s": round(total_rows / elapsed, 1),
+            "p50_ms": st["latency"]["p50_ms"],
+            "p99_ms": st["latency"]["p99_ms"],
+        }
+
+    # best-of-N per mode: each drive is ~100 ms, and on a small shared
+    # box (1-2 cores) a single drive's p50 carries GIL/scheduler noise
+    # comparable to the tracing cost under test — the minimum over
+    # repeats estimates each mode's noise floor, which is the honest
+    # numerator/denominator for an overhead *ratio*
+    def best(make_obs):
+        picked = None
+        for _ in range(OBS_DRIVE_REPEATS):
+            o = make_obs()
+            run = (o, *drive(o))
+            if picked is None or (
+                run[2]["latency"]["p50_ms"] < picked[2]["latency"]["p50_ms"]
+            ):
+                picked = run
+        return picked
+
+    _, _, st_off, _, t_off = best(lambda: False)
+    obs, rt_on, st_on, digest, t_on = best(
+        lambda: Observability(seed=0, registry=MetricsRegistry())
+    )
+    rows = [row("untraced", st_off, t_off), row("traced", st_on, t_on)]
+
+    # -- three-way conservation on the traced run ------------------------
+    tele_balances = st_on["requests"] == (
+        st_on["served_requests"] + st_on["failed_requests"]
+        + st_on["deadline_timeouts"] + st_on["closed_requests"]
+    )
+    cons = obs.tracer.conservation(digest[:12])
+    spans_match = (
+        cons["admitted"] == st_on["requests"]
+        and cons["served"] == st_on["served_requests"]
+        and cons["shed"] == st_on["shed_requests"]
+    )
+    series = obs.metrics.collect()
+
+    def prom_total(name):
+        return sum(series.get(f"repro_serve_{name}_total", {}).values())
+
+    prom_balances = prom_total("requests") == (
+        prom_total("served_requests") + prom_total("failed_requests")
+        + prom_total("deadline_timeouts") + prom_total("closed_requests")
+    ) and prom_total("requests") == st_on["requests"]
+    rendered = obs.render_prometheus()
+    gauges_present = all(
+        f"repro_serve_{g}" in rendered
+        for g in ("validity_fraction", "fallback_rate", "queue_rows",
+                  "step_time_ewma_seconds", "breaker_state")
+    )
+
+    p50_off = st_off["latency"]["p50_ms"] or 1e-9
+    p99_off = st_off["latency"]["p99_ms"] or 1e-9
+    meta = {
+        "clients": OBS_CLIENTS,
+        "reqs_per_client": reqs,
+        "req_rows": OBS_REQ_ROWS,
+        "drives_per_mode": OBS_DRIVE_REPEATS,
+        "max_wait_us": RUNTIME_MAX_WAIT_US,
+        "overhead_p50": round((st_on["latency"]["p50_ms"] or 0) / p50_off, 4),
+        "overhead_p99": round((st_on["latency"]["p99_ms"] or 0) / p99_off, 4),
+        "span_count": sum(
+            v for k, v in obs.tracer.counts(digest[:12]).items()
+            if "[" not in k
+        ),
+        "conservation": {
+            "submitted": cons["submitted"],
+            "unaccounted": cons["unaccounted"],
+            "telemetry_balances": bool(tele_balances),
+            "spans_match_telemetry": bool(spans_match),
+            "prometheus_balances": bool(prom_balances),
+            "prometheus_gauges_present": bool(gauges_present),
+        },
+    }
+    print("[serving] observability: traced vs untraced closed-loop serving")
+    print(fmt_table(rows, ["mode", "requests", "rows_s", "p50_ms", "p99_ms"]))
+    print(f"[serving] {meta}")
+    return {
+        "note": (
+            "identical seeded closed-loop workloads through Runtime(obs=False) "
+            "and a fully traced Runtime (private registry); best-of-N drives "
+            "per mode, p50/p99 from the per-request latency window, so "
+            "overhead_p50 is the request-level tracing tax (gated <= 1.05x; "
+            "the coalesce wait dominates both). "
+            "conservation re-proves served+failed+expired+closed == admitted "
+            "in telemetry counters, span counts and the Prometheus rendering"
+        ),
+        "rows": rows,
+        "meta": meta,
+    }
+
+
 SECTIONS = (
     "engine",
     "head_scaling",
@@ -1217,6 +1387,7 @@ SECTIONS = (
     "overload",
     "degraded_mode",
     "scaleout",
+    "observability",
 )
 
 
@@ -1286,6 +1457,8 @@ def run(sections: list[str] | None = None):
         payload["degraded_mode"] = bench_degraded_mode()
     if "scaleout" in chosen:
         payload["scaleout"] = bench_scaleout()
+    if "observability" in chosen:
+        payload["observability"] = bench_observability()
     path = save_json("BENCH_serving.json", payload)
     print(f"[serving] wrote {path}")
     return payload

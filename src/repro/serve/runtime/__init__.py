@@ -35,6 +35,12 @@ from repro.serve.runtime.errors import (
 )
 from repro.serve.runtime.faults import ENGINE_STEP, REGISTRY_LOAD, FaultInjector
 from repro.serve.runtime.guard import DriftGuard, ReservoirSampler
+from repro.serve.runtime.obs import (
+    MetricsRegistry,
+    Observability,
+    Tracer,
+    render_prometheus,
+)
 from repro.serve.runtime.registry import ArtifactRegistry, RegistryEntry
 from repro.serve.runtime.runtime import Runtime
 from repro.serve.runtime.scheduler import CircuitBreaker, MicroBatcher
@@ -52,10 +58,14 @@ __all__ = [
     "FaultInjector",
     "InjectedFault",
     "LatencyWindow",
+    "MetricsRegistry",
     "MicroBatcher",
     "ModelTelemetry",
+    "Observability",
     "RegistryEntry",
     "ReservoirSampler",
     "Runtime",
     "RuntimeOverloaded",
+    "Tracer",
+    "render_prometheus",
 ]

@@ -141,6 +141,16 @@ class DriftGuard:
                       the search to one whose envelope fits the traffic.
       compile_opts:   extra kwargs for ``compile_model`` (families=...,
                       dtypes=..., family_opts=...).
+      clock:          monotonic time source for cooldown spacing AND the
+                      heal-history trigger timestamps surfaced through
+                      ``Runtime.stats()`` — injectable so tests drive it.
+
+    Every heal attempt lands in the watched model's telemetry
+    (``record_heal`` → the ``heals`` block of ``Runtime.stats()``) and,
+    when the runtime has observability enabled, as a linked span arc
+    under the OLD digest's trace ring: trigger → reservoir → recompile
+    → canary → flip, all sharing one heal trace id with the trigger
+    span as parent.
     """
 
     def __init__(
@@ -158,6 +168,7 @@ class DriftGuard:
         cooldown_s: float = 0.0,
         min_valid_fraction: float | None = 0.9,
         compile_opts: dict | None = None,
+        clock=time.monotonic,
     ):
         self.runtime = runtime
         self.alias = alias
@@ -170,6 +181,7 @@ class DriftGuard:
         self.min_valid_fraction = min_valid_fraction
         self.compile_opts = dict(compile_opts or {})
         self.compile_opts.setdefault("seed", seed)
+        self._clock = clock
         self.reservoir = ReservoirSampler(capacity=capacity, seed=seed)
         self._heal_lock = threading.Lock()
         self._last_heal_at: float | None = None
@@ -221,25 +233,72 @@ class DriftGuard:
             verdict.update(triggered=True, reason="heal already in progress")
             return verdict
         try:
-            now = time.monotonic()
+            now = self._clock()
             if (self._last_heal_at is not None
                     and now - self._last_heal_at < self.cooldown_s):
                 verdict.update(triggered=True, reason="cooldown")
                 return verdict
             self._last_heal_at = now
             verdict.update(triggered=True)
-            verdict.update(self._heal_locked())
+            verdict.update(self._heal_locked(trigger_at=now, window=window))
             self.heals.append(verdict)
             return verdict
         finally:
             self._heal_lock.release()
 
-    def _heal_locked(self) -> dict:
+    def _tracer(self):
+        obs = getattr(self.runtime, "obs", None)
+        return obs.tracer if obs is not None else None
+
+    def _heal_locked(self, *, trigger_at: float, window: dict) -> dict:
         rt = self.runtime
         old_digest = rt.registry.resolve(self.alias)
         telemetry = rt.telemetry(self.alias)
         telemetry.record_recompile()
         sample = self.reservoir.sample()
+
+        # heal arc spans: one trace, the trigger span as common parent,
+        # recorded under the OLD digest's ring (where the drift happened)
+        tr = self._tracer()
+        model_key = old_digest[:12]
+        heal_trace = trigger_id = None
+        if tr is not None:
+            heal_trace = tr.new_trace()
+            trigger_id = tr.span(model_key, "heal.trigger",
+                                 trace_id=heal_trace, attrs={
+                                     "alias": self.alias,
+                                     "rate": window["rate"],
+                                     "rows": window["rows"],
+                                 })
+            tr.span(model_key, "heal.reservoir", trace_id=heal_trace,
+                    parent_id=trigger_id, attrs={
+                        "rows": int(sample.shape[0]),
+                        "seen": self.reservoir.seen,
+                    })
+
+        def _arc(name, **attrs):
+            if tr is not None:
+                tr.span(model_key, name, trace_id=heal_trace,
+                        parent_id=trigger_id, attrs=attrs)
+
+        def _finish(out):
+            healed = out.get("healed", False)
+            entry = dict(
+                trigger_at=trigger_at,
+                healed=healed,
+                old_digest=old_digest,
+                new_digest=out.get("new_digest", ""),
+                detail={k: out[k] for k in ("reason", "agreement", "family")
+                        if k in out},
+            )
+            telemetry.record_heal(**entry)
+            if healed:
+                # the alias now resolves to the NEW digest; mirror the
+                # flip there so ``stats(alias)`` keeps the heal visible
+                rt.telemetry(out["new_digest"]).record_heal(
+                    mirror=True, **entry
+                )
+            return out
 
         # 1. recompile the family × dtype search against CURRENT traffic;
         # the budget gains a validity floor (unless the caller pinned one)
@@ -253,17 +312,23 @@ class DriftGuard:
             )
         except Exception as e:                  # no candidate met the budget
             telemetry.record_canary(False)
-            return {"healed": False, "old_digest": old_digest,
-                    "reason": f"recompile failed: {e}"}
+            _arc("heal.recompile", ok=False, error=str(e))
+            return _finish({"healed": False, "old_digest": old_digest,
+                            "reason": f"recompile failed: {e}"})
+        _arc("heal.recompile", ok=True, family=artifact.family,
+             dtype=artifact.dtype)
 
         # 2. register content-addressed (NOT aliased — candidates are
         # invisible to alias traffic until the canary passes)
         new_digest = rt.register(artifact, exact=self.exact)
         if new_digest == old_digest:
             telemetry.record_canary(False)
-            return {"healed": False, "old_digest": old_digest,
-                    "new_digest": new_digest,
-                    "reason": "recompile reproduced the serving artifact"}
+            _arc("heal.canary", passed=False,
+                 reason="recompile reproduced the serving artifact")
+            return _finish({"healed": False, "old_digest": old_digest,
+                            "new_digest": new_digest,
+                            "reason": "recompile reproduced the serving "
+                                      "artifact"})
 
         # 3. canary through the REAL serving path on the candidate digest
         judge = _exact_labels(self.exact, sample)
@@ -271,6 +336,8 @@ class DriftGuard:
         agreement = float(np.mean(got == judge)) if judge.size else 0.0
         passed = agreement >= self.min_agreement
         telemetry.record_canary(passed)
+        _arc("heal.canary", passed=passed, agreement=agreement,
+             rows=int(judge.size), candidate=new_digest[:12])
         out = {
             "healed": passed,
             "old_digest": old_digest,
@@ -283,12 +350,14 @@ class DriftGuard:
         if not passed:
             out["reason"] = (f"canary agreement {agreement:.4f} < "
                              f"{self.min_agreement}")
-            return out
+            return _finish(out)
 
         # 4. atomic flip; old-digest traffic in flight drains untouched
         rt.set_alias(self.alias, new_digest)
         telemetry.reset_fallback_window()       # old window is stale evidence
-        return out
+        _arc("heal.flip", old_digest=old_digest[:12],
+             new_digest=new_digest[:12], alias=self.alias)
+        return _finish(out)
 
     # ------------------------------------------------------- background loop
 

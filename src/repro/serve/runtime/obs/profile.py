@@ -1,0 +1,90 @@
+"""Opt-in kernel profiling hooks around the engine/backend seam.
+
+Two annotation layers, both off by default (zero steady-state cost —
+the hot path sees one module-global ``bool`` check):
+
+* **Host-side** — ``annotate(name)`` wraps the blocking dispatch of a
+  compiled engine step in ``jax.profiler.TraceAnnotation`` so the
+  profiler timeline shows which engine/bucket a device slice belongs
+  to. ``SVMEngine.submit`` / ``submit_exact`` call this around every
+  step.
+* **Trace-time** — ``enable()`` installs a ``jax.named_scope`` factory
+  into ``repro.core.backend`` (via ``backend.set_profile_scope``, a
+  callback hook so the core layer never imports serving code). Scoring
+  functions traced *while enabled* get their XLA ops grouped under
+  ``repro.backend/...`` scopes. Functions compiled before ``enable()``
+  keep their old op names until recompiled — enable first, then warm.
+
+``capture(path)`` bundles the whole flow: enable annotations, open a
+``jax.profiler.trace`` session writing to ``path``, and restore the
+previous state on exit. ``Runtime.profile(model, Z, path)`` uses it to
+capture exactly one coalesced step.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+from repro.core import backend as _backend
+
+_lock = threading.Lock()
+_enabled = False
+
+
+def enabled() -> bool:
+    """True when profiling annotations are active."""
+    return _enabled
+
+
+def enable(on: bool = True) -> bool:
+    """Toggle profiling annotations; returns the previous state.
+
+    Enabling installs a ``jax.named_scope`` factory into the backend
+    dispatch seam so newly traced scoring functions carry structured
+    op names; disabling uninstalls it.
+    """
+    global _enabled
+    with _lock:
+        prev = _enabled
+        _enabled = bool(on)
+        from repro.serve import svm_engine as _engine
+
+        if _enabled:
+            import jax
+            from jax.profiler import TraceAnnotation
+
+            _backend.set_profile_scope(jax.named_scope)
+            _engine.set_profile_annotation(TraceAnnotation)
+        else:
+            _backend.set_profile_scope(None)
+            _engine.set_profile_annotation(None)
+    return prev
+
+
+def annotate(name: str):
+    """Context manager: ``jax.profiler.TraceAnnotation`` when enabled,
+    a no-op otherwise. Safe to use on every hot-path step."""
+    if not _enabled:
+        return contextlib.nullcontext()
+    from jax.profiler import TraceAnnotation
+
+    return TraceAnnotation(name)
+
+
+@contextlib.contextmanager
+def capture(path):
+    """Profile everything inside the block into ``path``.
+
+    Enables annotations, records a ``jax.profiler`` trace (viewable
+    with TensorBoard's profile plugin or ``perfetto``), then restores
+    the previous annotation state.
+    """
+    import jax
+
+    prev = enable(True)
+    try:
+        with jax.profiler.trace(str(path)):
+            yield
+    finally:
+        enable(prev)

@@ -119,11 +119,17 @@ class ArtifactRegistry:
         warmup_on_load: bool = True,
         engine_opts: dict | None = None,
         fault_injector: FaultInjector | None = None,
+        obs=None,
     ):
         self.memory_budget_bytes = memory_budget_bytes
         self.warmup_on_load = warmup_on_load
         self.engine_opts = dict(engine_opts or {})
         self.faults = fault_injector         # consulted at every path load
+        # obs.Observability (or None): engine loads, evictions and
+        # quarantines are recorded as spans under the digest prefix and
+        # as model_digest-labelled counters. Runtime injects its bundle
+        # here when the caller did not.
+        self.obs = obs
         self._entries: dict[str, RegistryEntry] = {}
         self._aliases: dict[str, str] = {}
         self._lock = threading.RLock()
@@ -133,6 +139,20 @@ class ArtifactRegistry:
         self.hits = 0                        # get_engine served from memory
         self.eviction_count = 0
         self.quarantine_count = 0
+
+    def _obs_event(self, span_name: str, counter_name: str, help_text: str,
+                   digest: str, attrs: dict | None = None) -> None:
+        """Record one registry lifecycle event (span + counter). Must be
+        called OUTSIDE the registry lock — the tracer/metric locks are
+        independent, but registry events are rare enough that holding
+        ``self._lock`` across them would be pure contention."""
+        obs = self.obs
+        if obs is None:
+            return
+        obs.tracer.span(digest[:12], span_name, attrs=attrs)
+        obs.metrics.counter(
+            counter_name, help_text, ("model_digest",)
+        ).labels(model_digest=digest[:12]).inc()
 
     def add_evict_listener(self, fn) -> None:
         """``fn(digest)`` fires after an engine eviction, OUTSIDE the
@@ -333,6 +353,13 @@ class ArtifactRegistry:
                     entry.engines = engines
                     entry.engine = engines[0]
                     self.loads += 1
+                self._obs_event(
+                    "registry.load", "repro_registry_loads_total",
+                    "Engine builds (including reloads after eviction).",
+                    digest, attrs={"replicas": want,
+                                   "nbytes": artifact.nbytes() * want,
+                                   "warmed": self.warmup_on_load},
+                )
         self._evict_to_budget(keep=digest)
         return digest, engines
 
@@ -355,9 +382,15 @@ class ArtifactRegistry:
 
     def _quarantine(self, entry: RegistryEntry, reason: str) -> None:
         with self._lock:
-            if entry.quarantined is None:
-                entry.quarantined = reason
-                self.quarantine_count += 1
+            if entry.quarantined is not None:
+                return
+            entry.quarantined = reason
+            self.quarantine_count += 1
+        self._obs_event(
+            "registry.quarantine", "repro_registry_quarantined_total",
+            "Entries quarantined for content-identity violations.",
+            entry.digest, attrs={"reason": reason},
+        )
 
     def _load_verified(self, entry: RegistryEntry) -> CompiledArtifact:
         """(Re)load ``entry.path`` with identity verification.
@@ -421,6 +454,11 @@ class ArtifactRegistry:
                 evicted.append(entry.digest)
                 self.eviction_count += 1
         for digest in evicted:               # listeners run outside the lock
+            self._obs_event(
+                "registry.evict", "repro_registry_evictions_total",
+                "Engines evicted under the memory budget.",
+                digest,
+            )
             for fn in self._evict_listeners:
                 fn(digest)
         return len(evicted)

@@ -41,6 +41,15 @@ Traffic listeners (``add_traffic_listener``) observe every submitted
 batch — the hook the ``DriftGuard`` reservoir-samples from to get a
 recompile dataset that reflects CURRENT traffic, not compile-time
 assumptions.
+
+Observability (PR 9): every runtime owns an ``obs.Observability``
+(``obs=False`` disables, an explicit instance isolates). Request
+lifecycle spans are recorded by the batchers under each model's digest
+prefix; ``ModelTelemetry`` counters mirror onto the bundle's metrics
+registry labelled (model_digest, alias, family, dtype);
+``render_prometheus()`` exposes them as Prometheus text; and
+``profile(model, Z, path)`` captures a ``jax.profiler`` trace of one
+coalesced step.
 """
 
 from __future__ import annotations
@@ -52,6 +61,8 @@ import numpy as np
 from repro.core.families import CompiledArtifact
 from repro.serve.runtime.errors import BatcherClosed
 from repro.serve.runtime.faults import FaultInjector
+from repro.serve.runtime.obs import Observability
+from repro.serve.runtime.obs import profile as obs_profile
 from repro.serve.runtime.registry import ArtifactRegistry
 from repro.serve.runtime.scheduler import DEFAULT_MAX_WAIT_US, MicroBatcher
 from repro.serve.runtime.telemetry import ModelTelemetry
@@ -71,14 +82,24 @@ class Runtime:
         default_deadline_s: float | None = None,
         breaker=True,
         fault_injector: FaultInjector | None = None,
+        obs=None,
     ):
+        # obs=None -> own bundle on the process default metrics registry;
+        # obs=False -> observability off (no spans, no metric mirroring);
+        # an Observability instance -> use it (isolated registries/tracers)
+        if obs is None:
+            obs = Observability()
+        self.obs: Observability | None = obs or None
         if registry is None:
             registry = ArtifactRegistry(
                 memory_budget_bytes=memory_budget_bytes,
                 warmup_on_load=warmup_on_load,
                 engine_opts=engine_opts,
                 fault_injector=fault_injector,
+                obs=self.obs,
             )
+        elif getattr(registry, "obs", None) is None and self.obs is not None:
+            registry.obs = self.obs
         self.registry = registry
         self.max_wait_us = max_wait_us
         self.flush_rows = flush_rows
@@ -138,6 +159,8 @@ class Runtime:
                 # and route new traffic to the fresh ones.
                 stale = b
                 tel = self._telemetry.setdefault(digest, ModelTelemetry())
+                if self.obs is not None:
+                    tel.bind_obs(self.obs.metrics, self._labels(digest, engine))
                 b = MicroBatcher(
                     engine,
                     max_wait_us=self.max_wait_us,
@@ -148,11 +171,28 @@ class Runtime:
                     breaker=self.breaker,
                     fault_injector=self.faults,
                     engines=engines,
+                    tracer=self.obs.tracer if self.obs is not None else None,
                 )
                 self._batchers[digest] = b
         if stale is not None:
             stale.close()
         return b
+
+    def _labels(self, digest: str, engine) -> dict:
+        """Metric label set for one served digest: digest prefix, the
+        alias currently pointing at it (first match; "" if served by
+        digest only), and the engine's family/dtype dimensions."""
+        alias = ""
+        for a, d in self.registry.aliases().items():
+            if d == digest:
+                alias = a
+                break
+        return {
+            "model_digest": digest[:12],
+            "alias": alias,
+            "family": getattr(engine, "family", ""),
+            "dtype": getattr(engine, "dtype", ""),
+        }
 
     def _on_evict(self, digest: str) -> None:
         """Registry evicted ``digest``'s engine: retire its batcher (the
@@ -249,6 +289,30 @@ class Runtime:
             "registry": self.registry.snapshot(),
             "models": {d[:12]: self.stats(d) for d in digests},
         }
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition of this runtime's metrics registry
+        ("" when observability is disabled). The future HTTP front door
+        (ROADMAP item 1) serves exactly this string."""
+        if self.obs is None:
+            return ""
+        return self.obs.render_prometheus()
+
+    def profile(self, model: str, Z, path) -> str:
+        """Capture a ``jax.profiler`` trace of ONE coalesced step.
+
+        Warms ``model`` first so the capture shows steady-state serving
+        (step dispatch + device compute), not compilation; then submits
+        ``Z`` and materializes the result inside the profiler session,
+        with engine-step trace annotations enabled for the duration.
+        The trace directory is written to ``path`` (viewable with
+        TensorBoard's profile plugin). Returns ``path``.
+        """
+        self.warmup(model)
+        with obs_profile.capture(path):
+            res = self.submit(model, Z).result()
+            np.asarray(res.values)          # device -> host sync in-session
+        return str(path)
 
     # -------------------------------------------------------------- lifetime
 

@@ -243,14 +243,16 @@ class _EmptyResult:
 
 
 class _Pending:
-    __slots__ = ("Z", "future", "t_enqueue", "deadline")
+    __slots__ = ("Z", "future", "t_enqueue", "deadline", "trace")
 
     def __init__(self, Z: np.ndarray, future: Future, t_enqueue: float,
-                 deadline: float | None = None):
+                 deadline: float | None = None, trace: str | None = None):
         self.Z = Z
         self.future = future
         self.t_enqueue = t_enqueue
         self.deadline = deadline          # absolute perf_counter time, or None
+        self.trace = trace                # obs trace id linking this
+                                          # request's lifecycle spans
 
 
 class MicroBatcher:
@@ -272,6 +274,11 @@ class MicroBatcher:
       * ``engines`` — replica engines for the same digest
         (``engines[0]`` must be ``engine``); flushes spread over them
         least-loaded, each behind its own breaker clone.
+      * ``tracer`` — an ``obs.Tracer``; when given, every request's
+        lifecycle (admission → queue wait → dispatch → engine step →
+        scatter → sync, plus shed/expired/failed/closed verdicts and
+        breaker transitions) is recorded as linked spans under this
+        batcher's ``name``.
     """
 
     def __init__(
@@ -286,6 +293,7 @@ class MicroBatcher:
         breaker=True,
         fault_injector: FaultInjector | None = None,
         engines: list | None = None,
+        tracer=None,
     ):
         engs = [engine] if engines is None else list(engines)
         if not engs or engs[0] is not engine:
@@ -319,6 +327,17 @@ class MicroBatcher:
             for i, eng in enumerate(engs)
         ]
         self.faults = fault_injector
+        # surface every replica's breaker gauge from birth (closed == 0)
+        # rather than waiting for a first transition to materialize it
+        for r in self.replicas:
+            if r.breaker is not None:
+                self.telemetry.record_breaker_state("closed", replica=r.index)
+        # obs.Tracer (or None): every admitted request gets a trace id at
+        # submit; lifecycle spans (queue wait, dispatch, engine step,
+        # scatter, sync, verdicts) link to it. Span recording is a dict
+        # append under one lock — cheap enough for the hot path.
+        self._tracer = tracer
+        self._cfg_strs: dict[int, str] = {}
         self._step_time_s = self.max_wait_s or 1e-4   # EWMA of measured steps
         self._queue: collections.deque[_Pending] = collections.deque()
         self._queued_rows = 0
@@ -367,8 +386,10 @@ class MicroBatcher:
             fut.set_result(_EmptyResult(self.engine))
             return fut
         now = time.perf_counter()
+        tr = self._tracer
         item = _Pending(Z, fut, now,
-                        None if deadline_s is None else now + deadline_s)
+                        None if deadline_s is None else now + deadline_s,
+                        trace=tr.new_trace() if tr is not None else None)
         with self._cond:
             if self._closed:
                 raise BatcherClosed(f"MicroBatcher({self.name!r}) is closed")
@@ -380,16 +401,31 @@ class MicroBatcher:
                 # empty queue always admits so a single request larger
                 # than the bound is still servable (the engine chunks it)
                 self.telemetry.record_shed(rows)
+                retry = self._retry_after_locked()
+                self._span("request.shed", trace_id=item.trace,
+                           attrs={"rows": rows, "retry_after_s": retry})
                 raise RuntimeOverloaded(
                     f"model {self.name!r}: queue full "
                     f"({self._queued_rows}/{self.max_queue_rows} rows)",
-                    retry_after_s=self._retry_after_locked(),
+                    retry_after_s=retry,
                 )
             self._queue.append(item)
             self._queued_rows += rows
             self.telemetry.record_enqueue(rows)
+            self._span("request.admitted", trace_id=item.trace,
+                       t_start=now, attrs={
+                           "rows": rows,
+                           "deadline": item.deadline is not None,
+                       })
             self._cond.notify()
         return fut
+
+    def _span(self, name: str, **kw) -> str | None:
+        """Record one span under this batcher's model key (no-op untraced)."""
+        tr = self._tracer
+        if tr is None:
+            return None
+        return tr.span(self.name, name, **kw)
 
     def _retry_after_locked(self) -> float:
         """Expected time for the current queue to drain: queued flushes ×
@@ -428,8 +464,13 @@ class MicroBatcher:
                 r.thread.join(timeout=5.0)
         with self._cond:                           # belt and braces: no future
             leftovers = self._drain_locked()       # survives close unresolved
+        if leftovers:
+            self.telemetry.record_closed(
+                len(leftovers), sum(p.Z.shape[0] for p in leftovers)
+            )
         self._fail_batch(leftovers,
-                         BatcherClosed(f"MicroBatcher({self.name!r}) is closed"))
+                         BatcherClosed(f"MicroBatcher({self.name!r}) is closed"),
+                         verdict="closed")
 
     def __enter__(self):
         return self
@@ -535,15 +576,30 @@ class MicroBatcher:
             with self._cond:
                 self._closed = True
                 leftovers = self._drain_locked()
+            if leftovers:
+                self.telemetry.record_closed(
+                    len(leftovers), sum(p.Z.shape[0] for p in leftovers)
+                )
             self._fail_batch(
                 leftovers,
                 BatcherClosed(f"MicroBatcher({self.name!r}) worker exited"),
+                verdict="closed",
             )
 
     # -------------------------------------------------------------- execution
 
-    def _fail_batch(self, batch: list[_Pending], exc: BaseException) -> None:
+    def _fail_batch(self, batch: list[_Pending], exc: BaseException,
+                    verdict: str | None = "failed",
+                    attrs: dict | None = None) -> None:
+        # ``verdict`` names the terminal span ("failed" / "closed");
+        # None means the caller already recorded its own verdict spans
         for p in batch:
+            if verdict is not None:
+                span_attrs = {"rows": p.Z.shape[0], "error": type(exc).__name__}
+                if attrs:
+                    span_attrs.update(attrs)
+                self._span(f"request.{verdict}", trace_id=p.trace,
+                           t_start=p.t_enqueue, attrs=span_attrs)
             # a client may have cancelled while queued; a cancelled future
             # must not take the whole flush worker down with it
             if p.future.set_running_or_notify_cancel():
@@ -552,10 +608,16 @@ class MicroBatcher:
     def _fail_expired(self, expired: list[_Pending]) -> None:
         rows = sum(p.Z.shape[0] for p in expired)
         self.telemetry.record_deadline_timeout(len(expired), rows)
+        now = time.perf_counter()
+        for p in expired:
+            self._span("request.expired", trace_id=p.trace,
+                       t_start=p.t_enqueue, t_end=now,
+                       attrs={"rows": p.Z.shape[0],
+                              "queued_s": now - p.t_enqueue})
         self._fail_batch(expired, DeadlineExceeded(
             f"model {self.name!r}: {len(expired)} request(s) expired "
             f"before a flush could serve them"
-        ))
+        ), verdict=None)
 
     def _sync_breaker_telemetry(self, replica: _Replica) -> None:
         if replica.breaker is None:
@@ -568,6 +630,11 @@ class MicroBatcher:
                 probe=(st == "half_open"),
                 replica=replica.index,
             )
+            self._span("breaker.transition", attrs={
+                "replica": replica.index,
+                "from": replica.last_state,
+                "to": st,
+            })
             replica.last_state = st
 
     def _select_replica(self) -> _Replica | None:
@@ -641,6 +708,24 @@ class MicroBatcher:
         """One fast-path flush on ``replica`` — inline on the flush
         thread (single replica) or on the replica's dispatch thread."""
         t0 = time.perf_counter()
+        tr = self._tracer
+        flush_trace = tr.new_trace() if tr is not None else None
+        bucket = replica.engine.bucket_for(
+            min(rows, replica.engine.max_batch)
+        )
+        def _emit_queue_waits():
+            # coalesce: each request's time in the queue, linked both to
+            # its own trace and (via attrs) to the flush that drained it.
+            # Emitted AFTER the engine step is dispatched: span bookkeeping
+            # for a deep coalesced batch then overlaps the asynchronous
+            # XLA work instead of sitting between the queue and the MXU.
+            if tr is not None:
+                for p in batch:
+                    self._span("request.queue_wait", trace_id=p.trace,
+                               t_start=p.t_enqueue, t_end=t0,
+                               attrs={"rows": p.Z.shape[0],
+                                      "flush": flush_trace})
+
         try:
             if self.faults is not None:
                 if len(self.replicas) > 1:
@@ -648,7 +733,9 @@ class MicroBatcher:
                 else:
                     self.faults.check(ENGINE_STEP)
             Z = np.concatenate([p.Z for p in batch], axis=0)
+            compiled_before = replica.engine.stats.compiled_steps
             result = replica.engine.submit(Z)
+            recompiled = replica.engine.stats.compiled_steps > compiled_before
             # e2e latency closes when the SHARED result first materializes
             # (one sample per coalesced request, recorded by whichever
             # client thread syncs first); per-row validity feeds the
@@ -657,12 +744,22 @@ class MicroBatcher:
             telemetry = self.telemetry
 
             def _on_materialize(done, ts=enqueued, tel=telemetry, n=rows,
-                                rep=replica):
+                                rep=replica, ftrace=flush_trace, t_sync=t0):
                 t_done = time.perf_counter()
                 for t_enq in ts:
                     tel.record_latency(t_done - t_enq)
                 valid = np.asarray(done[1])
-                tel.record_validity(n, int(n - int(valid.sum())))
+                invalid = int(n - int(valid.sum()))
+                tel.record_validity(n, invalid)
+                self._span("flush.sync", trace_id=ftrace,
+                           t_start=t_sync, t_end=t_done,
+                           attrs={"replica": rep.index, "rows": n})
+                # fast-path ONLY: degraded flushes never emit a validity
+                # span (mirrors record_validity's drift-window contract)
+                self._span("flush.validity", trace_id=ftrace,
+                           t_end=t_done, attrs={"replica": rep.index,
+                                                "rows": n,
+                                                "invalid": invalid})
                 with self._acct:
                     rep.inflight_rows -= n
 
@@ -676,10 +773,14 @@ class MicroBatcher:
                                         tightened=tightened)
             self.telemetry.record_batch_failure(len(batch), rows)
             self.telemetry.record_replica_failure(replica.index)
+            _emit_queue_waits()          # the wait happened even if the step failed
+            self._span("flush.failed", trace_id=flush_trace, t_start=t0,
+                       attrs={"replica": replica.index, "rows": rows,
+                              "error": type(e).__name__})
             if replica.breaker is not None:
                 replica.breaker.record_failure()
                 self._sync_breaker_telemetry(replica)
-            self._fail_batch(batch, e)
+            self._fail_batch(batch, e, attrs={"replica": replica.index})
             return
         if replica.breaker is not None:
             replica.breaker.record_success()
@@ -688,14 +789,61 @@ class MicroBatcher:
             # EWMA of step enqueue time feeds the retry_after_s estimate
             self._step_time_s = 0.8 * self._step_time_s + \
                 0.2 * (time.perf_counter() - t0)
+            step_ewma = self._step_time_s
             replica.flushes += 1
             replica.rows += rows
-        self.telemetry.record_flush(len(batch), rows, deadline=deadline,
-                                    tightened=tightened)
-        self.telemetry.record_replica_flush(replica.index, len(batch), rows)
+        # resolve every future FIRST: clients can start materializing the
+        # (asynchronously computing) result — which drops the GIL inside
+        # XLA — while the span/telemetry bookkeeping below runs in Python
         for p, s in zip(batch, slices):
             if p.future.set_running_or_notify_cancel():
                 p.future.set_result(s)
+        self.telemetry.record_step_time(step_ewma)
+        self.telemetry.record_flush(len(batch), rows, deadline=deadline,
+                                    tightened=tightened)
+        self.telemetry.record_replica_flush(replica.index, len(batch), rows,
+                                            bucket=bucket)
+        self.telemetry.record_served(len(batch), rows)
+        if tr is not None:
+            cfg_str = self._cfg_strs.get(bucket)
+            if recompiled or cfg_str is None:
+                # dataclass repr is slow; cache per bucket, refresh on
+                # recompile (the one event that can change the config)
+                cfg_str = str(replica.engine.bucket_configs.get(bucket))
+                self._cfg_strs[bucket] = cfg_str
+            # one batched enqueue for the whole flush: step + dispatch
+            # plus per-request queue-wait (linked to the flush trace via
+            # attrs) and served verdicts — same spans and the same id
+            # order as per-call emission, a fraction of the hot-path cost
+            now = tr.clock()
+            ridx = replica.index
+            events = [
+                ("engine.step", flush_trace, None, t0, now, {
+                    "replica": ridx,
+                    "bucket": bucket,
+                    "tile_config": cfg_str,
+                    "recompiled": recompiled,
+                    "rows": rows,
+                }),
+            ]
+            for p in batch:
+                events.append(
+                    ("request.queue_wait", p.trace, None, p.t_enqueue, t0,
+                     {"rows": p.Z.shape[0], "flush": flush_trace})
+                )
+            events.append(
+                ("flush.dispatch", flush_trace, None, t0, now,
+                 {"replica": ridx, "requests": len(batch), "rows": rows,
+                  "bucket": bucket, "deadline": deadline,
+                  "tightened": tightened})
+            )
+            for p in batch:
+                events.append(
+                    ("request.served", p.trace, None, p.t_enqueue, now,
+                     {"rows": p.Z.shape[0], "replica": ridx,
+                      "flush": flush_trace})
+                )
+            tr.span_many(self.name, events)
 
     def _execute_degraded(self, batch: list[_Pending], sizes, rows: int, *,
                           deadline: bool, tightened: bool) -> None:
@@ -706,6 +854,9 @@ class MicroBatcher:
         (the exact path is the already-degraded slow lane — fanning it
         out across replicas would just multiply pressure on the host).
         """
+        t0 = time.perf_counter()
+        tr = self._tracer
+        flush_trace = tr.new_trace() if tr is not None else None
         if not getattr(self.engine, "exact_available", False):
             # soonest probe window across replicas: the honest retry hint
             retry = min((r.breaker.retry_after() for r in self.replicas
@@ -717,7 +868,7 @@ class MicroBatcher:
                 f"model {self.name!r}: circuit breaker open and no exact "
                 f"model published to degrade to",
                 retry_after_s=retry or self.max_wait_s,
-            ))
+            ), attrs={"reason": "breaker_shed"})
             return
         try:
             Z = np.concatenate([p.Z for p in batch], axis=0)
@@ -726,11 +877,16 @@ class MicroBatcher:
             telemetry = self.telemetry
 
             # latency only — degraded rows are exact-served and must NOT
-            # feed the drift window (a fault is not input drift)
-            def _on_materialize(done, ts=enqueued, tel=telemetry):
+            # feed the drift window (a fault is not input drift); for the
+            # same reason no flush.validity span is emitted here
+            def _on_materialize(done, ts=enqueued, tel=telemetry,
+                                ftrace=flush_trace, n=rows, t_sync=t0):
                 t_done = time.perf_counter()
                 for t_enq in ts:
                     tel.record_latency(t_done - t_enq)
+                self._span("flush.sync", trace_id=ftrace,
+                           t_start=t_sync, t_end=t_done,
+                           attrs={"rows": n, "degraded": True})
 
             result.on_materialize = _on_materialize
             slices = result.split(sizes)
@@ -738,11 +894,23 @@ class MicroBatcher:
             self.telemetry.record_flush(len(batch), rows, deadline=deadline,
                                         tightened=tightened)
             self.telemetry.record_batch_failure(len(batch), rows)
-            self._fail_batch(batch, e)
+            self._span("flush.failed", trace_id=flush_trace, t_start=t0,
+                       attrs={"rows": rows, "degraded": True,
+                              "error": type(e).__name__})
+            self._fail_batch(batch, e, attrs={"degraded": True})
             return
         self.telemetry.record_flush(len(batch), rows, deadline=deadline,
                                     tightened=tightened)
         self.telemetry.record_degraded(len(batch), rows)
+        self.telemetry.record_served(len(batch), rows)
+        self._span("flush.degraded", trace_id=flush_trace, t_start=t0,
+                   attrs={"requests": len(batch), "rows": rows})
         for p, s in zip(batch, slices):
+            self._span("request.served", trace_id=p.trace,
+                       t_start=p.t_enqueue, attrs={
+                           "rows": p.Z.shape[0],
+                           "degraded": True,
+                           "flush": flush_trace,
+                       })
             if p.future.set_running_or_notify_cancel():
                 p.future.set_result(s)

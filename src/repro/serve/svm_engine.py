@@ -95,6 +95,29 @@ from repro.kernels.common import TileConfig, tuning
 
 Array = jax.Array
 
+# Profiling seam: repro.serve.runtime.obs.profile installs a context-
+# manager factory (jax.profiler.TraceAnnotation) here so engine steps
+# show up as named host-side slices in profiler timelines. Push-pattern
+# like backend.set_profile_scope — the engine never imports obs, and the
+# disabled hot path costs one module-global None check per step.
+_profile_annotation = None
+
+
+def set_profile_annotation(factory) -> None:
+    """Install (or clear, with None) a ``name -> context manager`` factory
+    wrapped around every engine step dispatch."""
+    global _profile_annotation
+    _profile_annotation = factory
+
+
+def _annotate(name: str):
+    factory = _profile_annotation
+    if factory is None:
+        import contextlib
+
+        return contextlib.nullcontext()
+    return factory(name)
+
 
 def bucket_size(n: int, min_bucket: int = 32, max_batch: int = 8192) -> int:
     """Next power-of-two bucket for a batch of n rows (n <= max_batch).
@@ -438,7 +461,8 @@ class SVMEngine:
             bkt = bucket_size(m, self.min_bucket, self.max_batch)
             buf = np.zeros((bkt, self.d), dtype=np.float32)
             buf[:m] = rows                                  # host-side pad
-            out = self._step(self._put(buf))
+            with _annotate(f"svm_engine.step/{self.family}/b{bkt}"):
+                out = self._step(self._put(buf))
             chunks.append((out, m))
         self.stats.record_batch(n, [(c[0][0].shape[0], c[1]) for c in chunks])
         # Z is only needed to re-score bound-violating rows; don't pin the
@@ -474,7 +498,8 @@ class SVMEngine:
             bkt = bucket_size(m, self.min_bucket, self.max_batch)
             buf = np.zeros((bkt, self.d), dtype=np.float32)
             buf[:m] = rows
-            out = self._slow_step(self._put(buf))
+            with _annotate(f"svm_engine.step_exact/b{bkt}"):
+                out = self._slow_step(self._put(buf))
             chunks.append((out, m))
         self.stats.record_degraded(n)
         return EngineResult(self, None, chunks)   # exact already: no re-score
@@ -487,6 +512,12 @@ class SVMEngine:
     def predict_labels(self, Z) -> np.ndarray:
         """{-1, +1} (binary) or class indices (multiclass)."""
         return self.submit(Z).labels
+
+    def bucket_for(self, n: int) -> int:
+        """The padded bucket a batch of ``n`` rows dispatches into —
+        lets the scheduler stamp engine-step spans with the bucket and
+        its resolved ``TileConfig`` without re-deriving the policy."""
+        return bucket_size(max(int(n), 1), self.min_bucket, self.max_batch)
 
     def jit_cache_size(self) -> int:
         """Number of compiled step variants (== buckets seen); bounded by

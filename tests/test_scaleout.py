@@ -28,6 +28,8 @@ from repro.serve.runtime import (
     ArtifactRegistry,
     FaultInjector,
     InjectedFault,
+    MetricsRegistry,
+    Observability,
 )
 from repro.serve.svm_engine import SVMEngine
 
@@ -463,3 +465,91 @@ def test_compile_model_prunes_predictably_expensive_candidates():
     )
     rows2 = art2.meta["compile_report"]["families"]
     assert not any(r.get("skipped") == "pruned_by_cost" for r in rows2)
+
+
+def test_per_replica_span_counts_sum_to_model_totals_under_faults():
+    """Observability across scale-out: the tracer's per-replica served
+    sub-keys (plus the degraded sub-key) partition the model's served
+    total, and a scripted per-replica fault shows up attributed to
+    exactly that replica's flush — even though the span ring could have
+    evicted the individual spans."""
+    m = _svm(5)
+    fi = FaultInjector(0)
+    obs = Observability(seed=2, registry=MetricsRegistry())
+    with Runtime(
+        engine_opts=ENGINE_OPTS,
+        fault_injector=fi,
+        max_wait_us=500.0,
+        breaker=dict(fail_threshold=1, reset_after_s=60.0),
+        obs=obs,
+    ) as rt:
+        digest = rt.publish("m", maclaurin.compile(m), exact=m, replicas=3)
+        rng = np.random.default_rng(0)
+        rt.predict("m", _rows(rng, 2))            # warm flush -> replica 0
+        fi.fail_next(FaultInjector.replica_site(ENGINE_STEP, 1), 1)
+        doomed = rt.submit("m", _rows(rng, 3))    # rotation -> replica 1
+        with pytest.raises(InjectedFault):
+            doomed.result(timeout=30.0)
+        for _ in range(6):
+            rt.submit("m", _rows(rng, 4)).result(timeout=30.0)
+
+        st = rt.stats("m")
+        counts = obs.tracer.counts(digest[:12])
+        per_replica = {
+            i: counts.get(f"request.served[replica={i}]", 0) for i in range(3)
+        }
+        degraded = counts.get("request.served[degraded]", 0)
+        assert sum(per_replica.values()) + degraded == counts["request.served"]
+        assert counts["request.served"] == st["served_requests"] == 7
+        assert degraded == 0                      # siblings kept the fast path
+        # replica 1 served nothing after its trip; 0 and 2 carried the load
+        assert per_replica[1] == 0
+        assert per_replica[0] >= 1 and per_replica[2] >= 1
+        # the injected fault is attributed to replica 1, span- and count-wise
+        assert counts.get("flush.failed[replica=1]", 0) == 1
+        assert counts.get("request.failed", 0) == 1 == st["failed_requests"]
+        cons = obs.tracer.conservation(digest[:12])
+        assert cons["unaccounted"] == 0 and cons["submitted"] == 8
+
+
+def test_degraded_rows_never_appear_in_validity_spans():
+    """flush.validity spans are the drift window's span-level twin: they
+    must cover fast-path rows only. A degraded (all-breakers-open) exact
+    flush emits flush.degraded / degraded request.served spans instead,
+    so the validity spans' row total equals the fallback window's."""
+    m = _svm(3)
+    fi = FaultInjector(0)
+    obs = Observability(seed=4, registry=MetricsRegistry())
+    with Runtime(
+        engine_opts=ENGINE_OPTS,
+        fault_injector=fi,
+        max_wait_us=500.0,
+        breaker=dict(fail_threshold=1, reset_after_s=60.0),
+        obs=obs,
+    ) as rt:
+        digest = rt.publish("m", maclaurin.compile(m), exact=m, replicas=2)
+        rng = np.random.default_rng(0)
+        rt.predict("m", _rows(rng, 2))            # warm: 2 fast-path rows
+        for i in range(2):
+            fi.fail_next(FaultInjector.replica_site(ENGINE_STEP, i), 1)
+        for _ in range(2):                        # trip both breakers
+            with pytest.raises(InjectedFault):
+                rt.submit("m", _rows(rng, 2)).result(timeout=30.0)
+        res = rt.submit("m", _rows(rng, 5)).result(timeout=30.0)
+        assert not np.asarray(res.valid).any()    # exact-served rows
+
+        key = digest[:12]
+        validity = obs.tracer.spans(key, "flush.validity")
+        assert validity, "fast-path flushes must record validity spans"
+        assert all(not s["attrs"].get("degraded") for s in validity)
+        valid_rows = sum(s["attrs"]["rows"] for s in validity)
+        st = rt.stats("m")
+        assert valid_rows == st["fallback_window"]["rows"] == 2
+        # the degraded flush is traced as degraded, not as drift evidence
+        degraded = obs.tracer.spans(key, "flush.degraded")
+        assert len(degraded) == 1 and degraded[0]["attrs"]["rows"] == 5
+        served = obs.tracer.spans(key, "request.served")
+        by_degraded = [s for s in served if s["attrs"].get("degraded")]
+        assert len(by_degraded) == 1
+        assert all("replica" not in s["attrs"] for s in by_degraded)
+        assert obs.tracer.counts(key).get("request.served[degraded]") == 1

@@ -31,7 +31,13 @@ is broken:
     path; the head-sharded K>=4096 serving kept exact argmax parity
     with the unsharded reference. The section must be generated under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (>= 2
-    devices are required).
+    devices are required);
+  * ``observability``: the traced run's request p50 stays within 1.05x
+    of the untraced run's (span recording is lock-cheap), and the
+    conservation identity (served + failed + expired + closed ==
+    admitted; submitted == admitted + shed) holds simultaneously in
+    telemetry counters, tracer span counts and the Prometheus
+    rendering, with the first-class gauges present in the exposition.
 
 Usage: ``python tools/check_bench_invariants.py [path-to-json]``
 Exits non-zero listing every violated invariant.
@@ -338,6 +344,44 @@ def check_scaleout(payload: dict, problems: list[str]) -> None:
         )
 
 
+def check_observability(payload: dict, problems: list[str]) -> None:
+    section = payload.get("observability")
+    if not section or not section.get("rows") or not section.get("meta"):
+        problems.append("observability: section missing or empty")
+        return
+    modes = {r.get("mode") for r in section["rows"]}
+    if modes != {"untraced", "traced"}:
+        problems.append(
+            f"observability: need untraced+traced rows, got {sorted(modes)}"
+        )
+    meta = section["meta"]
+    overhead = meta.get("overhead_p50")
+    if overhead is None or overhead > 1.05:
+        problems.append(
+            f"observability: traced p50 overhead {overhead!r} > 1.05x — "
+            f"span recording is no longer lock-cheap"
+        )
+    cons = meta.get("conservation", {})
+    if cons.get("unaccounted") != 0:
+        problems.append(
+            f"observability: {cons.get('unaccounted')!r} request span(s) "
+            f"unaccounted (admitted != served+failed+expired+closed)"
+        )
+    if not cons.get("submitted"):
+        problems.append("observability: zero submitted requests traced")
+    for flag in (
+        "telemetry_balances",
+        "spans_match_telemetry",
+        "prometheus_balances",
+        "prometheus_gauges_present",
+    ):
+        if cons.get(flag) is not True:
+            problems.append(
+                f"observability: conservation flag {flag} is "
+                f"{cons.get(flag)!r}, must be True"
+            )
+
+
 def main(argv: list[str]) -> int:
     path = argv[1] if len(argv) > 1 else DEFAULT_PATH
     with open(path) as f:
@@ -350,14 +394,15 @@ def main(argv: list[str]) -> int:
     check_overload(payload, problems)
     check_degraded(payload, problems)
     check_scaleout(payload, problems)
+    check_observability(payload, problems)
     if problems:
         print(f"[bench-invariants] {len(problems)} violation(s) in {path}:")
         for p in problems:
             print(f"  FAIL {p}")
         return 1
     print(f"[bench-invariants] OK — model_size, family_compare, fastfood, "
-          f"runtime_throughput, overload, degraded_mode and scaleout "
-          f"invariants hold in {path}")
+          f"runtime_throughput, overload, degraded_mode, scaleout and "
+          f"observability invariants hold in {path}")
     return 0
 
 
