@@ -93,9 +93,12 @@ from repro.serve.runtime import (
     FaultInjector,
     MetricsRegistry,
     Observability,
+    PublishSpec,
     Runtime,
     RuntimeOverloaded,
 )
+from repro.serve.server import create_app
+from repro.serve.server import serve as http_serve
 from repro.kernels.quadform.ref import quadform_heads_ref
 from repro.serve.svm_engine import SVMEngine, bucket_size
 
@@ -213,6 +216,24 @@ OBS_CLIENTS = 8
 OBS_REQS_PER_CLIENT = 60
 OBS_REQ_ROWS = 4
 OBS_DRIVE_REPEATS = 5
+
+# serving_http (PR 10): the network tax. The SAME runtime serves an
+# identical closed-loop workload twice — first in-process
+# (rt.submit(...).result()), then through the stdlib HTTP front door
+# with one persistent connection per client. Per-request wall-clock
+# p50/p99 are measured CLIENT-side in both legs so the ratio is the
+# full wire overhead (TCP hop + JSON + ASGI dispatch + executor
+# bridge), not just server time. The gated invariants: conservation
+# still balances across the HTTP hop (client 200s == telemetry served
+# == spans), the queue drains to zero (zero hung futures), requests
+# keep coalescing through the bridge, and the HTTP overhead stays
+# bounded (generously — CI hosts are noisy; the point is catching a
+# 100x regression like an accidental per-request handshake or a
+# serialized bridge, not enforcing microseconds).
+HTTP_CLIENTS = 8
+HTTP_REQS_PER_CLIENT = 50
+HTTP_REQ_ROWS = 4
+HTTP_MAX_WAIT_US = 1000.0
 
 SMOKE = False           # set by --smoke: same sections, fewer repeats
 
@@ -734,8 +755,8 @@ def bench_runtime_throughput() -> dict:
         flush_rows=RUNTIME_FLUSH_ROWS,
         engine_opts=dict(min_bucket=32, max_batch=1024),
     )
-    rt.publish("primary", art, exact=m)
-    rt.publish("secondary", art2, exact=m2)
+    rt.publish("primary", art, PublishSpec(exact=m))
+    rt.publish("secondary", art2, PublishSpec(exact=m2))
     rt.warmup("primary")
     rt.warmup("secondary")
     digest, engine = rt.registry.get_engine("primary")
@@ -851,7 +872,7 @@ def bench_overload() -> dict:
         engine_opts=dict(min_bucket=32, max_batch=1024),
         fault_injector=fi,
     )
-    rt.publish("hot", art, exact=m)
+    rt.publish("hot", art, PublishSpec(exact=m))
     rt.warmup("hot")
     rng = np.random.default_rng(13)
     warm = rng.standard_normal((OVERLOAD_REQ_ROWS, D)).astype(np.float32) * 0.3
@@ -964,7 +985,7 @@ def bench_degraded_mode() -> dict:
         breaker=dict(fail_threshold=3, reset_after_s=600.0),
         fault_injector=fi,
     )
-    rt.publish("hot", art, exact=m)
+    rt.publish("hot", art, PublishSpec(exact=m))
     rt.warmup("hot")
     rng = np.random.default_rng(17)
     Z = rng.standard_normal((DEGRADED_BATCH, D)).astype(np.float32) * 0.3
@@ -1098,7 +1119,7 @@ def bench_scaleout() -> dict:
             ),
             fault_injector=fi,
         )
-        rt.publish("scale", art, exact=m, replicas=n_rep)
+        rt.publish("scale", art, PublishSpec(exact=m, replicas=n_rep))
         _, engines = rt.registry.get_engines("scale")
         cache_before = sum(e.jit_cache_size() for e in engines)
 
@@ -1249,7 +1270,7 @@ def bench_observability() -> dict:
             engine_opts=dict(min_bucket=32, max_batch=1024),
             obs=obs,
         )
-        rt.publish("primary", art, exact=m)
+        rt.publish("primary", art, PublishSpec(exact=m))
         rt.warmup("primary")
         digest = rt.registry.resolve("primary")
         rng = np.random.default_rng(11)
@@ -1376,6 +1397,132 @@ def bench_observability() -> dict:
     }
 
 
+def bench_serving_http() -> dict:
+    """The HTTP front door vs in-process submit on identical traffic.
+
+    One runtime, two legs. Leg A: closed-loop clients calling
+    ``rt.submit(...).result()`` directly. Leg B: the same clients as
+    HTTP clients (stdlib ``http.client``, one keep-alive connection
+    each) POSTing ``:predict`` to the ASGI app — the full wire path:
+    parse, tenancy, executor bridge, micro-batcher, JSON response.
+    Latencies are client-side per request in BOTH legs, so the
+    overhead ratio is honest about everything the network adds.
+    """
+    reqs = 8 if SMOKE else HTTP_REQS_PER_CLIENT
+    m = _model(seed=3)
+    art = families.maclaurin.compile(m)
+    rt = Runtime(
+        max_wait_us=HTTP_MAX_WAIT_US,
+        flush_rows=RUNTIME_FLUSH_ROWS,
+        engine_opts=dict(min_bucket=32, max_batch=1024),
+        obs=Observability(seed=0, registry=MetricsRegistry()),
+    )
+    rt.publish("primary", art, PublishSpec(exact=m))
+    rt.warmup("primary")
+    digest = rt.registry.resolve("primary")
+    rng = np.random.default_rng(17)
+    work = [
+        [rng.standard_normal((HTTP_REQ_ROWS, D)).astype(np.float32) * 0.3
+         for _ in range(reqs)]
+        for _ in range(HTTP_CLIENTS)
+    ]
+    total_rows = HTTP_CLIENTS * reqs * HTTP_REQ_ROWS
+
+    def fan_out(target):
+        threads = [threading.Thread(target=target, args=(i, w))
+                   for i, w in enumerate(work)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return time.perf_counter() - t0
+
+    # ---- leg A: in-process closed loop --------------------------------
+    lat_proc: list[list[float]] = [[] for _ in range(HTTP_CLIENTS)]
+
+    def in_process(i, batches):
+        for Z in batches:
+            t0 = time.perf_counter()
+            rt.submit("primary", Z).result().values
+            lat_proc[i].append(time.perf_counter() - t0)
+
+    t_proc = fan_out(in_process)
+
+    # ---- leg B: the same traffic over HTTP ----------------------------
+    app = create_app(rt)
+    lat_http: list[list[float]] = [[] for _ in range(HTTP_CLIENTS)]
+    statuses: list[list[int]] = [[] for _ in range(HTTP_CLIENTS)]
+    before = rt.stats("primary")
+    with http_serve(app) as handle:
+        import http.client
+
+        def over_http(i, batches):
+            conn = http.client.HTTPConnection(handle.host, handle.port,
+                                              timeout=60)
+            for Z in batches:
+                body = json.dumps({"rows": Z.tolist()}).encode()
+                t0 = time.perf_counter()
+                conn.request("POST", "/v1/models/primary:predict", body,
+                             {"Content-Type": "application/json"})
+                resp = conn.getresponse()
+                resp.read()
+                lat_http[i].append(time.perf_counter() - t0)
+                statuses[i].append(resp.status)
+            conn.close()
+
+        t_http = fan_out(over_http)
+    after = rt.stats("primary")
+
+    flat_proc = np.array([t for c in lat_proc for t in c])
+    flat_http = np.array([t for c in lat_http for t in c])
+    flat_status = [s for c in statuses for s in c]
+    d_reqs = after["requests"] - before["requests"]
+    d_flushes = max(1, after["flushes"] - before["flushes"])
+    cons = rt.obs.tracer.conservation(digest[:12])
+    queue_rows = after["queue_rows"]
+    rt.close()
+
+    p = lambda a, q: round(float(np.percentile(a, q)) * 1e3, 3)  # noqa: E731
+    rows = [
+        {"path": "in_process", "clients": HTTP_CLIENTS,
+         "requests": len(flat_proc), "p50_ms": p(flat_proc, 50),
+         "p99_ms": p(flat_proc, 99),
+         "rows_s": round(total_rows / t_proc, 1)},
+        {"path": "http", "clients": HTTP_CLIENTS,
+         "requests": len(flat_http), "p50_ms": p(flat_http, 50),
+         "p99_ms": p(flat_http, 99),
+         "rows_s": round(total_rows / t_http, 1)},
+    ]
+    meta = {
+        "req_rows": HTTP_REQ_ROWS,
+        "max_wait_us": HTTP_MAX_WAIT_US,
+        "http_statuses_ok": sum(1 for s in flat_status if s == 200),
+        "http_statuses_other": sum(1 for s in flat_status if s != 200),
+        "http_overhead_p50": round(
+            rows[1]["p50_ms"] / max(rows[0]["p50_ms"], 1e-9), 2
+        ),
+        "http_coalescing_factor": round(d_reqs / d_flushes, 2),
+        "queue_rows_after": queue_rows,
+        "conservation": cons,
+    }
+    print("[serving] serving_http: in-process vs HTTP front door")
+    print(fmt_table(rows, ["path", "clients", "requests", "p50_ms",
+                           "p99_ms", "rows_s"]))
+    print(f"[serving] {meta}")
+    return {
+        "note": (
+            "identical closed-loop traffic served in-process "
+            "(rt.submit().result()) and over the stdlib HTTP front door "
+            "(persistent connections, JSON bodies); latencies are "
+            "client-side per request; conservation must balance and the "
+            "queue must drain to zero after the HTTP leg"
+        ),
+        "rows": rows,
+        "meta": meta,
+    }
+
+
 SECTIONS = (
     "engine",
     "head_scaling",
@@ -1388,6 +1535,7 @@ SECTIONS = (
     "degraded_mode",
     "scaleout",
     "observability",
+    "serving_http",
 )
 
 
@@ -1459,6 +1607,8 @@ def run(sections: list[str] | None = None):
         payload["scaleout"] = bench_scaleout()
     if "observability" in chosen:
         payload["observability"] = bench_observability()
+    if "serving_http" in chosen:
+        payload["serving_http"] = bench_serving_http()
     path = save_json("BENCH_serving.json", payload)
     print(f"[serving] wrote {path}")
     return payload

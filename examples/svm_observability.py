@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from repro.core import gamma_max
 from repro.core.families import maclaurin
 from repro.core.rbf import SVMModel
-from repro.serve import Runtime
+from repro.serve import PublishSpec, Runtime
 from repro.serve.runtime import MetricsRegistry, Observability
 
 DIM = 16
@@ -66,7 +66,9 @@ def main():
     out_dir = Path(tempfile.mkdtemp(prefix="svm_obs_"))
 
     with Runtime(engine_opts=dict(min_bucket=8, max_batch=64), obs=obs) as rt:
-        digest = rt.publish("detector", maclaurin.compile(model), exact=model)
+        digest = rt.publish(
+            "detector", maclaurin.compile(model), PublishSpec(exact=model)
+        )
         key = digest[:12]
         rng = np.random.default_rng(1)
 

@@ -42,7 +42,13 @@ import jax.numpy as jnp
 
 from repro.core import Budget, compile_model, gamma_max
 from repro.data.synthetic import make_blobs
-from repro.serve import DriftGuard, FaultInjector, Runtime, RuntimeOverloaded
+from repro.serve import (
+    DriftGuard,
+    FaultInjector,
+    PublishSpec,
+    Runtime,
+    RuntimeOverloaded,
+)
 from repro.serve.runtime import ENGINE_STEP
 from repro.svm import train_lssvm
 
@@ -77,9 +83,9 @@ def main():
         fault_injector=faults,
         engine_opts=dict(min_bucket=32, max_batch=256),
     )
-    d1 = rt.publish("detector", det_art, exact=det_model)
-    d2 = rt.publish("classifier", cls_art, exact=cls_model)
-    assert rt.publish("detector", det_art, exact=det_model) == d1  # dedupe
+    d1 = rt.publish("detector", det_art, PublishSpec(exact=det_model))
+    d2 = rt.publish("classifier", cls_art, PublishSpec(exact=cls_model))
+    assert rt.publish("detector", det_art, PublishSpec(exact=det_model)) == d1  # dedupe
     print(f"published detector   -> {d1[:12]} ({det_art.family})")
     print(f"published classifier -> {d2[:12]} ({cls_art.family})")
 

@@ -40,7 +40,7 @@ from jax.sharding import Mesh  # noqa: E402
 from repro.core import gamma_max  # noqa: E402
 from repro.core.families import maclaurin  # noqa: E402
 from repro.core.rbf import SVMModel  # noqa: E402
-from repro.serve import FaultInjector, Runtime  # noqa: E402
+from repro.serve import FaultInjector, PublishSpec, Runtime  # noqa: E402
 from repro.serve.runtime import ENGINE_STEP  # noqa: E402
 from repro.serve.svm_engine import SVMEngine  # noqa: E402
 
@@ -108,7 +108,7 @@ def main():
                      engine_opts=dict(min_bucket=REQ_ROWS,
                                       max_batch=REQ_ROWS),
                      fault_injector=fi) as rt:
-            rt.publish("m", art, exact=model, replicas=n)
+            rt.publish("m", art, PublishSpec(exact=model, replicas=n))
             rt.predict("m", np.zeros((2, DIM), np.float32))  # warm
             rate = drive(rt, "m", seed=n)
             per = rt.stats("m")["replicas"]
@@ -122,7 +122,7 @@ def main():
                  breaker=dict(fail_threshold=1, reset_after_s=60.0),
                  engine_opts=dict(min_bucket=8, max_batch=64),
                  fault_injector=fi) as rt:
-        rt.publish("m", art, exact=model, replicas=3)
+        rt.publish("m", art, PublishSpec(exact=model, replicas=3))
         rng = np.random.default_rng(0)
         rt.predict("m", 0.3 * rng.standard_normal((2, DIM)).astype(np.float32))
         fi.fail_next(FaultInjector.replica_site(ENGINE_STEP, 1), 1)

@@ -31,7 +31,9 @@ from repro.serve.runtime.errors import (
     BatcherClosed,
     DeadlineExceeded,
     InjectedFault,
+    ModelNotFound,
     RuntimeOverloaded,
+    ServingError,
 )
 from repro.serve.runtime.faults import ENGINE_STEP, REGISTRY_LOAD, FaultInjector
 from repro.serve.runtime.guard import DriftGuard, ReservoirSampler
@@ -41,6 +43,7 @@ from repro.serve.runtime.obs import (
     Tracer,
     render_prometheus,
 )
+from repro.serve.runtime.publish import PublishSpec
 from repro.serve.runtime.registry import ArtifactRegistry, RegistryEntry
 from repro.serve.runtime.runtime import Runtime
 from repro.serve.runtime.scheduler import CircuitBreaker, MicroBatcher
@@ -60,12 +63,15 @@ __all__ = [
     "LatencyWindow",
     "MetricsRegistry",
     "MicroBatcher",
+    "ModelNotFound",
     "ModelTelemetry",
     "Observability",
+    "PublishSpec",
     "RegistryEntry",
     "ReservoirSampler",
     "Runtime",
     "RuntimeOverloaded",
+    "ServingError",
     "Tracer",
     "render_prometheus",
 ]

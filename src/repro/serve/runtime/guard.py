@@ -58,6 +58,7 @@ import numpy as np
 from repro.core.families import compile_model
 from repro.core.families.base import stack_heads
 from repro.core.rbf import rbf_kernel
+from repro.serve.runtime.publish import PublishSpec
 
 
 class ReservoirSampler:
@@ -320,7 +321,7 @@ class DriftGuard:
 
         # 2. register content-addressed (NOT aliased — candidates are
         # invisible to alias traffic until the canary passes)
-        new_digest = rt.register(artifact, exact=self.exact)
+        new_digest = rt.register(artifact, PublishSpec(exact=self.exact))
         if new_digest == old_digest:
             telemetry.record_canary(False)
             _arc("heal.canary", passed=False,

@@ -51,8 +51,9 @@ import jax
 
 from repro.core.families import CompiledArtifact
 from repro.core.families.base import _HEADER_MEMBER
-from repro.serve.runtime.errors import ArtifactCorrupt
+from repro.serve.runtime.errors import ArtifactCorrupt, ModelNotFound
 from repro.serve.runtime.faults import REGISTRY_LOAD, FaultInjector
+from repro.serve.runtime.publish import PublishSpec, resolve_spec
 from repro.serve.svm_engine import SVMEngine
 
 _DIGEST_LEN = 64           # sha256 hex
@@ -69,6 +70,7 @@ class RegistryEntry:
     engine: SVMEngine | None = None         # primary replica (replicas[0])
     replicas: int = 1                       # engines to build from this digest
     engines: list = dataclasses.field(default_factory=list)
+    warmup: bool | None = None              # per-model warmup_on_load override
     nbytes: int = 0                         # resident bytes once known
     tick: int = 0                           # LRU clock stamp
     evictions: int = 0
@@ -166,6 +168,7 @@ class ArtifactRegistry:
     def register(
         self,
         artifact: CompiledArtifact,
+        spec: PublishSpec | None = None,
         *,
         alias: str | None = None,
         exact=None,
@@ -173,6 +176,11 @@ class ArtifactRegistry:
         replicas: int | None = None,
     ) -> str:
         """Index ``artifact`` under its content digest; returns the digest.
+
+        Options travel in one ``PublishSpec`` — the same shape
+        ``Runtime.publish`` and the HTTP management API serialize (the
+        bare ``alias``/``exact``/``path``/``replicas`` kwargs are
+        deprecated-but-accepted aliases for ``spec=PublishSpec(...)``).
 
         Re-registering an identical compile is a no-op on the entry
         (dedupe); ``alias``/``exact``/``path`` still update, so a caller
@@ -184,6 +192,9 @@ class ArtifactRegistry:
         ``None`` leaves the entry's current replica count alone, so a
         plain re-register never silently collapses a scaled-out model.
         """
+        spec = resolve_spec(spec, caller="ArtifactRegistry.register",
+                            alias=alias, exact=exact, path=path,
+                            replicas=replicas)
         digest = artifact.digest()
         with self._lock:
             entry = self._entries.get(digest)
@@ -192,14 +203,14 @@ class ArtifactRegistry:
                 self._entries[digest] = entry
             elif entry.artifact is None:
                 entry.artifact = artifact
-            if exact is not None:
-                entry.exact = exact
-            if path is not None:
-                entry.path = path
-            if replicas is not None:
-                r = int(replicas)
-                if r < 1:
-                    raise ValueError(f"replicas must be >= 1, got {replicas}")
+            if spec.exact is not None:
+                entry.exact = spec.exact
+            if spec.path is not None:
+                entry.path = spec.path
+            if spec.warmup is not None:
+                entry.warmup = spec.warmup
+            if spec.replicas is not None:
+                r = int(spec.replicas)
                 if r != entry.replicas:
                     # retire every built replica atomically: the next
                     # resolve rebuilds at the new count, and the runtime's
@@ -207,11 +218,12 @@ class ArtifactRegistry:
                     entry.replicas = r
                     entry.engines = []
                     entry.engine = None
-            if alias is not None:
-                self._aliases[alias] = digest
+            if spec.alias is not None:
+                self._aliases[spec.alias] = digest
         return digest
 
-    def add_file(self, path: str, *, alias: str | None = None, exact=None) -> str:
+    def add_file(self, path: str, spec: PublishSpec | None = None, *,
+                 alias: str | None = None, exact=None) -> str:
         """Index one saved artifact WITHOUT loading its arrays.
 
         ``save`` writes exactly ``to_bytes()``, so hashing the file bytes
@@ -221,7 +233,20 @@ class ArtifactRegistry:
         The file is structurally validated first (zip CRC + header): a
         corrupt or truncated artifact raises ``ArtifactCorrupt`` and is
         never indexed — a bad file must not acquire an identity.
+
+        ``spec`` carries the publication options (alias/replicas/warmup/
+        exact; its ``path`` field is ignored — the positional ``path``
+        is authoritative here). The bare ``alias``/``exact`` kwargs
+        remain first-class for this entry point (not deprecated): a
+        file index is the one place the file IS the argument.
         """
+        if spec is None:
+            spec = PublishSpec(alias=alias, exact=exact)
+        elif alias is not None or exact is not None:
+            raise TypeError(
+                "ArtifactRegistry.add_file: pass either spec= or "
+                "alias=/exact=, not both"
+            )
         digest = _hash_file(path)
         _validate_npz(path, digest)
         with self._lock:
@@ -231,10 +256,16 @@ class ArtifactRegistry:
                 self._entries[digest] = entry
             elif entry.path is None:
                 entry.path = path
-            if exact is not None:
-                entry.exact = exact
-            if alias is not None:
-                self._aliases[alias] = digest
+            if spec.exact is not None:
+                entry.exact = spec.exact
+            if spec.warmup is not None:
+                entry.warmup = spec.warmup
+            if spec.replicas is not None and spec.replicas != entry.replicas:
+                entry.replicas = int(spec.replicas)
+                entry.engines = []
+                entry.engine = None
+            if spec.alias is not None:
+                self._aliases[spec.alias] = digest
         return digest
 
     def add_directory(self, dirpath: str, *, tag: str = "latest") -> dict[str, str]:
@@ -269,12 +300,15 @@ class ArtifactRegistry:
             self._aliases[alias] = digest
             return digest
 
-    def publish(self, alias: str, artifact: CompiledArtifact, *, exact=None,
+    def publish(self, alias: str, artifact: CompiledArtifact,
+                spec: PublishSpec | None = None, *, exact=None,
                 replicas: int | None = None) -> str:
         """Register + flip ``alias`` in one atomic step; returns the digest."""
+        spec = resolve_spec(spec, caller="ArtifactRegistry.publish",
+                            exact=exact, replicas=replicas)
+        spec = dataclasses.replace(spec, alias=alias)
         with self._lock:
-            return self.register(artifact, alias=alias, exact=exact,
-                                 replicas=replicas)
+            return self.register(artifact, spec)
 
     def aliases(self) -> dict[str, str]:
         with self._lock:
@@ -295,9 +329,14 @@ class ArtifactRegistry:
             if len(matches) == 1:
                 return matches[0]
             if len(matches) > 1:
-                raise KeyError(f"ambiguous model ref {ref!r} ({len(matches)} matches)")
-            raise KeyError(
-                f"unknown model ref {ref!r}; known aliases: {sorted(self._aliases)}"
+                raise ModelNotFound(
+                    f"ambiguous model ref {ref!r} ({len(matches)} matches)",
+                    ref=ref,
+                )
+            raise ModelNotFound(
+                f"unknown model ref {ref!r}; known aliases: "
+                f"{sorted(self._aliases)}",
+                ref=ref,
             )
 
     # --------------------------------------------------------------- serving
@@ -345,7 +384,10 @@ class ArtifactRegistry:
                             f"entry {digest[:12]} has no artifact and no path"
                         )
                     artifact = self._load_verified(entry)
-                engines = self._build_replicas(artifact, entry.exact, want)
+                warm = (self.warmup_on_load if entry.warmup is None
+                        else entry.warmup)
+                engines = self._build_replicas(artifact, entry.exact, want,
+                                               warmup=warm)
                 with self._lock:
                     entry.artifact = artifact
                     # each replica bakes its own device copy of the arrays
@@ -358,15 +400,18 @@ class ArtifactRegistry:
                     "Engine builds (including reloads after eviction).",
                     digest, attrs={"replicas": want,
                                    "nbytes": artifact.nbytes() * want,
-                                   "warmed": self.warmup_on_load},
+                                   "warmed": warm},
                 )
         self._evict_to_budget(keep=digest)
         return digest, engines
 
-    def _build_replicas(self, artifact, exact, count: int) -> list[SVMEngine]:
+    def _build_replicas(self, artifact, exact, count: int, *,
+                        warmup: bool | None = None) -> list[SVMEngine]:
         """``count`` engines off one artifact, pinned round-robin across
         local devices (pinning is skipped when the caller already chose
         placement via ``device=`` / ``head_mesh=`` engine opts)."""
+        if warmup is None:
+            warmup = self.warmup_on_load
         devices = jax.local_devices()
         engines = []
         for i in range(count):
@@ -375,7 +420,7 @@ class ArtifactRegistry:
                     and "head_mesh" not in opts):
                 opts["device"] = devices[i % len(devices)]
             engine = SVMEngine(artifact, exact, **opts)
-            if self.warmup_on_load:
+            if warmup:
                 engine.warmup()
             engines.append(engine)
         return engines
@@ -423,6 +468,59 @@ class ArtifactRegistry:
                 f"{entry.path}: {reason}", digest=entry.digest, path=entry.path
             ) from e
 
+    def evict(self, ref: str) -> str:
+        """Administratively drop ``ref``'s built engines; returns the digest.
+
+        Same semantics as a budget eviction: identity (digest, aliases,
+        registration) survives, the next use transparently rebuilds. An
+        in-memory registration keeps its artifact (it is the only copy);
+        a file-backed one drops the arrays too. Evict listeners fire
+        outside the lock so the runtime retires the digest's batcher.
+        """
+        with self._lock:
+            digest = self.resolve(ref)
+            entry = self._entries[digest]
+            had_engine = entry.engine is not None
+            entry.engine = None
+            entry.engines = []
+            if entry.path is not None:
+                entry.artifact = None
+            if had_engine:
+                entry.evictions += 1
+                self.eviction_count += 1
+        if had_engine:
+            self._obs_event(
+                "registry.evict", "repro_registry_evictions_total",
+                "Engines evicted under the memory budget.",
+                digest, attrs={"reason": "admin"},
+            )
+            for fn in self._evict_listeners:
+                fn(digest)
+        return digest
+
+    def set_replicas(self, ref: str, replicas: int) -> str:
+        """Re-scale ``ref`` to ``replicas`` engines; returns the digest.
+
+        Retires every built replica atomically (the next resolve rebuilds
+        at the new count) and notifies evict listeners so the runtime
+        swaps the digest's batcher onto the fresh engine set.
+        """
+        r = int(replicas)
+        if r < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        with self._lock:
+            digest = self.resolve(ref)
+            entry = self._entries[digest]
+            changed = r != entry.replicas
+            if changed:
+                entry.replicas = r
+                entry.engines = []
+                entry.engine = None
+        if changed:
+            for fn in self._evict_listeners:
+                fn(digest)
+        return digest
+
     def loaded_bytes(self) -> int:
         with self._lock:
             return sum(e.nbytes for e in self._entries.values() if e.engine is not None)
@@ -464,6 +562,27 @@ class ArtifactRegistry:
         return len(evicted)
 
     # ------------------------------------------------------------- telemetry
+
+    def list_models(self) -> list[dict]:
+        """One JSON-able row per registered digest — the management
+        API's ``GET /v1/models`` body."""
+        with self._lock:
+            alias_of: dict[str, list[str]] = {}
+            for a, d in self._aliases.items():
+                alias_of.setdefault(d, []).append(a)
+            return [
+                {
+                    "digest": e.digest,
+                    "aliases": sorted(alias_of.get(e.digest, [])),
+                    "loaded": e.engine is not None,
+                    "replicas": e.replicas,
+                    "path": e.path,
+                    "nbytes": e.nbytes,
+                    "evictions": e.evictions,
+                    "quarantined": e.quarantined,
+                }
+                for e in self._entries.values()
+            ]
 
     def snapshot(self) -> dict:
         with self._lock:

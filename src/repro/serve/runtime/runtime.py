@@ -3,7 +3,7 @@
 One object per server process:
 
     rt = Runtime(memory_budget_bytes=256 << 20)
-    rt.publish("detector", artifact, exact=svm)      # or load_directory(...)
+    rt.publish("detector", artifact, PublishSpec(exact=svm))
     fut = rt.submit("detector", Z)                   # async, coalesced
     values = fut.result().values                     # one shared host sync
 
@@ -63,6 +63,7 @@ from repro.serve.runtime.errors import BatcherClosed
 from repro.serve.runtime.faults import FaultInjector
 from repro.serve.runtime.obs import Observability
 from repro.serve.runtime.obs import profile as obs_profile
+from repro.serve.runtime.publish import PublishSpec, resolve_spec
 from repro.serve.runtime.registry import ArtifactRegistry
 from repro.serve.runtime.scheduler import DEFAULT_MAX_WAIT_US, MicroBatcher
 from repro.serve.runtime.telemetry import ModelTelemetry
@@ -118,20 +119,28 @@ class Runtime:
 
     # ------------------------------------------------------------ publishing
 
-    def publish(self, alias: str, artifact: CompiledArtifact, *, exact=None,
+    def publish(self, alias: str, artifact: CompiledArtifact,
+                spec: PublishSpec | None = None, *, exact=None,
                 replicas: int | None = None) -> str:
         """Register ``artifact`` and atomically point ``alias`` at it.
+
+        Options travel in one ``PublishSpec`` (``spec=PublishSpec(
+        replicas=2, warmup=True)``) — the same shape the HTTP management
+        API serializes; the bare ``exact=``/``replicas=`` kwargs are
+        deprecated-but-accepted for one release.
 
         ``replicas=N`` scales the model out over N engines (pinned
         round-robin across local devices); the model's batcher then
         routes each flush to the least-loaded replica. ``None`` keeps
         the current count (default 1).
         """
-        return self.registry.publish(alias, artifact, exact=exact,
-                                     replicas=replicas)
+        spec = resolve_spec(spec, caller="Runtime.publish",
+                            exact=exact, replicas=replicas)
+        return self.registry.publish(alias, artifact, spec)
 
-    def register(self, artifact: CompiledArtifact, **kw) -> str:
-        return self.registry.register(artifact, **kw)
+    def register(self, artifact: CompiledArtifact,
+                 spec: PublishSpec | None = None, **kw) -> str:
+        return self.registry.register(artifact, spec, **kw)
 
     def load_directory(self, dirpath: str, **kw) -> dict[str, str]:
         return self.registry.add_directory(dirpath, **kw)

@@ -1,0 +1,28 @@
+"""HTTP front door over ``repro.serve.runtime.Runtime``.
+
+Public surface: ``create_app`` builds the ASGI application,
+``serve`` runs it on a background localhost server, ``TenantConfig``
+declares per-tenant quotas. Everything else in this package is wiring.
+"""
+
+from repro.serve.server.app import App, create_app
+from repro.serve.server.httpd import ServerHandle, serve
+from repro.serve.server.tenancy import (
+    TenantConfig,
+    TenantQuotaExceeded,
+    TenantTable,
+    Unauthenticated,
+)
+from repro.serve.server.wire import InvalidRequest
+
+__all__ = [
+    "App",
+    "InvalidRequest",
+    "ServerHandle",
+    "TenantConfig",
+    "TenantQuotaExceeded",
+    "TenantTable",
+    "Unauthenticated",
+    "create_app",
+    "serve",
+]

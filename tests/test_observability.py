@@ -19,7 +19,7 @@ import pytest
 from repro.core import gamma_max
 from repro.core.rbf import SVMModel
 from repro.core.families import Budget, compile_model, maclaurin
-from repro.serve import Runtime
+from repro.serve import PublishSpec, Runtime
 from repro.serve.runtime import (
     ENGINE_STEP,
     DriftGuard,
@@ -212,7 +212,7 @@ def test_runtime_exposes_first_class_gauges_and_spans():
     obs = Observability(seed=3, registry=MetricsRegistry())
     rng = np.random.default_rng(1)
     with Runtime(engine_opts=ENGINE_OPTS, max_wait_us=500.0, obs=obs) as rt:
-        digest = rt.publish("m", maclaurin.compile(m), exact=m, replicas=2)
+        digest = rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m, replicas=2))
         rt.predict("m", _rows(rng, 2))
         futs = [rt.submit("m", _rows(rng, 3)) for _ in range(8)]
         for f in futs:
@@ -302,7 +302,7 @@ def test_conservation_holds_under_scripted_faults():
         breaker=dict(fail_threshold=1, reset_after_s=60.0),
         obs=obs,
     ) as rt:
-        digest = rt.publish("m", maclaurin.compile(m), exact=m, replicas=2)
+        digest = rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m, replicas=2))
         rt.predict("m", _rows(rng, 2))
         fi.fail_next(FaultInjector.replica_site(ENGINE_STEP, 1), 1)
         doomed = rt.submit("m", _rows(rng, 3))
@@ -344,7 +344,7 @@ def test_conservation_under_seeded_chaos_interleavings():
             obs=obs,
         )
         try:
-            digest = rt.publish("m", maclaurin.compile(m), exact=m, replicas=2)
+            digest = rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m, replicas=2))
             rng = np.random.default_rng(chaos_seed)
             try:
                 rt.predict("m", _rows(rng, 2))  # warm; may itself be faulted
@@ -386,7 +386,7 @@ def test_heal_history_in_stats_with_injected_clock():
     now = [100.0]
     obs = Observability(seed=9, registry=MetricsRegistry())
     with Runtime(engine_opts=ENGINE_OPTS, obs=obs) as rt:
-        old_digest = rt.publish("clf", art, exact=m)
+        old_digest = rt.publish("clf", art, PublishSpec(exact=m))
         guard = DriftGuard(
             rt,
             "clf",
@@ -472,7 +472,7 @@ def test_runtime_profile_writes_a_trace(tmp_path):
     m = _svm(0)
     rng = np.random.default_rng(0)
     with Runtime(engine_opts=ENGINE_OPTS, obs=Observability()) as rt:
-        rt.publish("m", maclaurin.compile(m), exact=m)
+        rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m))
         out = rt.profile("m", _rows(rng, 4), tmp_path)
         assert out == str(tmp_path)
     assert not obs_profile.enabled()  # capture() restored the hook state

@@ -19,7 +19,7 @@ import pytest
 from repro.core import gamma_max
 from repro.core.rbf import SVMModel, rbf_kernel
 from repro.core.families import Budget, compile_model, maclaurin
-from repro.serve import Runtime
+from repro.serve import PublishSpec, Runtime
 from repro.serve.runtime import (
     ENGINE_STEP,
     REGISTRY_LOAD,
@@ -140,7 +140,7 @@ def test_bounded_queue_sheds_with_retry_after():
     fi = FaultInjector(0, slow_step_rate=1.0, slow_step_s=0.02)
     with Runtime(engine_opts=ENGINE_OPTS, fault_injector=fi,
                  max_queue_rows=16, max_wait_us=100.0) as rt:
-        rt.publish("m", art, exact=m)
+        rt.publish("m", art, PublishSpec(exact=m))
         rt.predict("m", _rows(np.random.default_rng(0), 2))  # warm
         rng = np.random.default_rng(1)
         futs, shed = [], 0
@@ -162,7 +162,7 @@ def test_bounded_queue_sheds_with_retry_after():
 def test_empty_queue_always_admits_oversized_request():
     m = _svm(2)
     with Runtime(engine_opts=ENGINE_OPTS, max_queue_rows=8) as rt:
-        rt.publish("m", maclaurin.compile(m), exact=m)
+        rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m))
         Z = _rows(np.random.default_rng(0), 32)      # 4x the queue bound
         vals, _ = rt.predict("m", Z)                 # admitted: queue was empty
         assert vals.shape == (32,)
@@ -171,7 +171,7 @@ def test_empty_queue_always_admits_oversized_request():
 def test_deadline_exceeded_fails_future_not_batcher():
     m = _svm(3)
     with Runtime(engine_opts=ENGINE_OPTS, max_wait_us=50_000.0) as rt:
-        rt.publish("m", maclaurin.compile(m), exact=m)
+        rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m))
         rng = np.random.default_rng(0)
         fut = rt.submit("m", _rows(rng, 1), deadline_s=0.005)
         with pytest.raises(DeadlineExceeded):
@@ -188,7 +188,7 @@ def test_queue_pressure_tightens_wait():
     m = _svm(4)
     with Runtime(engine_opts=ENGINE_OPTS, max_queue_rows=16,
                  max_wait_us=10_000.0) as rt:
-        rt.publish("m", maclaurin.compile(m), exact=m)
+        rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m))
         rng = np.random.default_rng(0)
         # 3 queued rows on a 16-row bound is ~19% pressure: below the
         # 8-row bucket (so the flush is deadline-triggered) but above the
@@ -199,7 +199,7 @@ def test_queue_pressure_tightens_wait():
         assert st["tightened_waits"] >= 1
         # an UNBOUNDED runtime never tightens (no pressure signal)
         with Runtime(engine_opts=ENGINE_OPTS, max_wait_us=10_000.0) as rt2:
-            rt2.publish("m", maclaurin.compile(m), exact=m)
+            rt2.publish("m", maclaurin.compile(m), PublishSpec(exact=m))
             rt2.submit("m", _rows(rng, 3)).result(timeout=10.0)
             assert rt2.stats("m")["tightened_waits"] == 0
 
@@ -212,7 +212,7 @@ def test_engine_fault_fails_only_its_batch():
     fi = FaultInjector(0)
     with Runtime(engine_opts=ENGINE_OPTS, fault_injector=fi,
                  breaker=dict(fail_threshold=5)) as rt:
-        rt.publish("m", maclaurin.compile(m), exact=m)
+        rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m))
         rng = np.random.default_rng(0)
         rt.predict("m", _rows(rng, 2))               # warm
         fi.fail_next(ENGINE_STEP, 1)
@@ -236,8 +236,8 @@ def test_fault_on_one_model_leaves_others_serving():
     fi = FaultInjector(0)
     with Runtime(engine_opts=ENGINE_OPTS, fault_injector=fi,
                  breaker=dict(fail_threshold=1, reset_after_s=60.0)) as rt:
-        rt.publish("a", maclaurin.compile(m1), exact=m1)
-        rt.publish("b", maclaurin.compile(m2), exact=m2)
+        rt.publish("a", maclaurin.compile(m1), PublishSpec(exact=m1))
+        rt.publish("b", maclaurin.compile(m2), PublishSpec(exact=m2))
         rng = np.random.default_rng(0)
         rt.predict("a", _rows(rng, 2))
         rt.predict("b", _rows(rng, 2))
@@ -260,7 +260,7 @@ def test_breaker_degrades_to_exact_and_recovers():
     fi = FaultInjector(0)
     with Runtime(engine_opts=ENGINE_OPTS, fault_injector=fi,
                  breaker=dict(fail_threshold=2, reset_after_s=0.1)) as rt:
-        rt.publish("m", maclaurin.compile(m), exact=m)
+        rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m))
         rng = np.random.default_rng(0)
         rt.predict("m", _rows(rng, 2))
         fi.fail_next(ENGINE_STEP, 2)
@@ -394,7 +394,7 @@ def test_close_resolves_every_pending_future_and_joins_threads():
     fi = FaultInjector(0, slow_step_rate=1.0, slow_step_s=0.02)
     rt = Runtime(engine_opts=ENGINE_OPTS, fault_injector=fi,
                  max_wait_us=50_000.0)
-    rt.publish("m", maclaurin.compile(m), exact=m)
+    rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m))
     rng = np.random.default_rng(0)
     rt.predict("m", _rows(rng, 2))
     batcher = rt._batchers[rt.registry.resolve("m")]
@@ -421,8 +421,8 @@ def test_eviction_mid_traffic_resolves_pending_futures():
     m1, m2 = _svm(17), _svm(18)
     rt = Runtime(engine_opts=ENGINE_OPTS, memory_budget_bytes=1,
                  warmup_on_load=False, max_wait_us=20_000.0)
-    rt.publish("a", maclaurin.compile(m1), exact=m1)
-    rt.publish("b", maclaurin.compile(m2), exact=m2)
+    rt.publish("a", maclaurin.compile(m1), PublishSpec(exact=m1))
+    rt.publish("b", maclaurin.compile(m2), PublishSpec(exact=m2))
     rng = np.random.default_rng(0)
     futs = [rt.submit("a", _rows(rng, 2)) for _ in range(4)]
     rt.predict("b", _rows(rng, 2))                   # forces eviction of "a"
@@ -445,7 +445,7 @@ def _chaos_run(seed, *, threads=8, per_thread=25, fi_kwargs=None,
     with Runtime(engine_opts=ENGINE_OPTS, fault_injector=fi,
                  breaker=dict(fail_threshold=3, reset_after_s=0.05),
                  **(runtime_kwargs or {})) as rt:
-        rt.publish("m", maclaurin.compile(m), exact=m)
+        rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m))
         try:
             rt.predict("m", _rows(np.random.default_rng(seed), 2))
         except InjectedFault:
@@ -523,7 +523,7 @@ def test_chaos_corrupt_file_under_load(tmp_path):
     rt = Runtime(engine_opts=ENGINE_OPTS, warmup_on_load=False,
                  memory_budget_bytes=1)              # every swap evicts
     rt.registry.add_file(p1, alias="a@latest", exact=m1)
-    rt.publish("b", maclaurin.compile(m2), exact=m2)
+    rt.publish("b", maclaurin.compile(m2), PublishSpec(exact=m2))
     rt.predict("a", _rows(np.random.default_rng(0), 2))
     FaultInjector.corrupt_file(p1, seed=3)           # mutate behind the registry
     outcomes = {"served": 0, "corrupt": 0}
@@ -569,7 +569,7 @@ def _conservation_world(max_queue_rows, fault_rate, schedule, seed):
     with Runtime(engine_opts=ENGINE_OPTS, fault_injector=fi,
                  max_queue_rows=max_queue_rows, max_wait_us=1_000.0,
                  breaker=dict(fail_threshold=2, reset_after_s=0.02)) as rt:
-        rt.publish("m", maclaurin.compile(m), exact=m)
+        rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m))
         rng = np.random.default_rng(seed)
         futs = []
         for step in schedule:
@@ -647,7 +647,7 @@ def test_drift_guard_green_window_is_cheap_noop():
     art = compile_model(m, Budget(max_err=0.05),
                         sample=_rows(np.random.default_rng(0), 128, scale=0.3))
     with Runtime(engine_opts=ENGINE_OPTS) as rt:
-        rt.publish("clf", art, exact=m)
+        rt.publish("clf", art, PublishSpec(exact=m))
         guard = DriftGuard(rt, "clf", exact=m, budget=Budget(max_err=0.05),
                            threshold=0.5, min_rows=32, seed=5).attach()
         rng = np.random.default_rng(1)
@@ -670,7 +670,7 @@ def test_drift_guard_end_to_end_heal():
                         sample=_rows(rng, 256, scale=0.25),
                         families=("maclaurin",))
     with Runtime(engine_opts=ENGINE_OPTS) as rt:
-        rt.publish("clf", art, exact=m)
+        rt.publish("clf", art, PublishSpec(exact=m))
         guard = DriftGuard(rt, "clf", exact=m, budget=Budget(max_err=0.08),
                            threshold=0.3, min_rows=48, min_agreement=0.9,
                            capacity=192, seed=9).attach()
@@ -723,7 +723,7 @@ def test_drift_guard_rejects_bad_canary():
                         sample=_rows(rng, 128, scale=0.25),
                         families=("maclaurin",))
     with Runtime(engine_opts=ENGINE_OPTS) as rt:
-        rt.publish("clf", art, exact=m)
+        rt.publish("clf", art, PublishSpec(exact=m))
         # min_agreement=1.01 is unreachable: every canary fails
         guard = DriftGuard(rt, "clf", exact=m, budget=Budget(max_err=0.08),
                            threshold=0.2, min_rows=32, min_agreement=1.01,
@@ -746,7 +746,7 @@ def test_drift_guard_cooldown_limits_heal_rate():
                         sample=_rows(rng, 128, scale=0.25),
                         families=("maclaurin",))
     with Runtime(engine_opts=ENGINE_OPTS) as rt:
-        rt.publish("clf", art, exact=m)
+        rt.publish("clf", art, PublishSpec(exact=m))
         guard = DriftGuard(rt, "clf", exact=m, budget=Budget(max_err=0.08),
                            threshold=0.2, min_rows=32, min_agreement=1.01,
                            capacity=128, seed=13, cooldown_s=300.0).attach()

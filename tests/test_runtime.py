@@ -15,7 +15,7 @@ import pytest
 from repro.core import gamma_max
 from repro.core.rbf import SVMModel, rbf_kernel
 from repro.core.families import fourier, maclaurin
-from repro.serve import Runtime, SVMEngine
+from repro.serve import PublishSpec, Runtime, SVMEngine
 from repro.serve.runtime import ArtifactRegistry, MicroBatcher
 
 ENGINE_OPTS = dict(min_bucket=8, max_batch=64)
@@ -304,7 +304,7 @@ def test_fourier_artifact_fallback_through_runtime():
           for n in (1, 3, 2, 4, 1, 2, 3, 1)]
     with Runtime(max_wait_us=100_000, flush_rows=17,
                  engine_opts=ENGINE_OPTS) as rt:
-        rt.publish("rff", art, exact=m)
+        rt.publish("rff", art, PublishSpec(exact=m))
         rt.warmup("rff")
         results = [None] * len(Zs)
 

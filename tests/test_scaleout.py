@@ -22,7 +22,7 @@ from repro.core.families import Budget, compile_model, fourier, maclaurin
 from repro.kernels.common import autotune, tuning
 from repro.kernels.common.config import TileConfig
 from repro.launch import roofline
-from repro.serve import Runtime
+from repro.serve import PublishSpec, Runtime
 from repro.serve.runtime import (
     ENGINE_STEP,
     ArtifactRegistry,
@@ -87,7 +87,7 @@ def test_replicated_publish_spreads_flushes_and_conserves():
     m = _svm(1)
     art = maclaurin.compile(m)
     with Runtime(engine_opts=ENGINE_OPTS, max_wait_us=500.0) as rt:
-        rt.publish("m", art, exact=m, replicas=3)
+        rt.publish("m", art, PublishSpec(exact=m, replicas=3))
         _, engines = rt.registry.get_engines("m")
         assert len(engines) == 3
         rng = np.random.default_rng(0)
@@ -122,7 +122,7 @@ def test_replica_fault_trips_only_its_own_breaker():
         max_wait_us=500.0,
         breaker=dict(fail_threshold=1, reset_after_s=60.0),
     ) as rt:
-        rt.publish("m", maclaurin.compile(m), exact=m, replicas=3)
+        rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m, replicas=3))
         rng = np.random.default_rng(0)
         rt.predict("m", _rows(rng, 2))  # warm flush -> replica 0
         # script the NEXT flush on replica 1 only; siblings stay healthy
@@ -160,7 +160,7 @@ def test_all_replicas_open_degrades_once_and_keeps_drift_window_clean():
         max_wait_us=500.0,
         breaker=dict(fail_threshold=1, reset_after_s=60.0),
     ) as rt:
-        rt.publish("m", maclaurin.compile(m), exact=m, replicas=2)
+        rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m, replicas=2))
         rng = np.random.default_rng(0)
         rt.predict("m", _rows(rng, 2))  # warm: 2 valid fast-path rows
         for i in range(2):
@@ -190,10 +190,10 @@ def test_all_replicas_open_degrades_once_and_keeps_drift_window_clean():
 def test_registry_retires_every_replica_on_count_change():
     art = maclaurin.compile(_svm(4))
     reg = ArtifactRegistry(warmup_on_load=False, engine_opts=ENGINE_OPTS)
-    reg.publish("m", art, replicas=2)
+    reg.publish("m", art, PublishSpec(replicas=2))
     _, two = reg.get_engines("m")
     assert len(two) == 2
-    reg.publish("m", art, replicas=3)  # same digest, new scale
+    reg.publish("m", art, PublishSpec(replicas=3))  # same digest, new scale
     _, three = reg.get_engines("m")
     assert len(three) == 3
     # atomic retirement: no old engine survives into the new set
@@ -209,10 +209,10 @@ def test_runtime_survives_replica_count_change_mid_traffic():
     m = _svm(5)
     art = maclaurin.compile(m)
     with Runtime(engine_opts=ENGINE_OPTS, max_wait_us=500.0) as rt:
-        rt.publish("m", art, exact=m, replicas=2)
+        rt.publish("m", art, PublishSpec(exact=m, replicas=2))
         rng = np.random.default_rng(0)
         rt.predict("m", _rows(rng, 2))
-        rt.publish("m", art, exact=m, replicas=3)  # hot re-scale
+        rt.publish("m", art, PublishSpec(exact=m, replicas=3))  # hot re-scale
         Z = _rows(rng, 4)
         vals, _ = rt.predict("m", Z)  # stale batcher retired, rebuilt
         np.testing.assert_allclose(vals, _exact_scores(m, Z)[:, 0], atol=0.15)
@@ -392,7 +392,7 @@ def test_runtime_serves_head_sharded_replicas():
     art = maclaurin.compile(m)
     opts = dict(ENGINE_OPTS, head_mesh=mesh)
     with Runtime(engine_opts=opts, max_wait_us=500.0) as rt:
-        rt.publish("mc", art, replicas=2)
+        rt.publish("mc", art, PublishSpec(replicas=2))
         rng = np.random.default_rng(0)
         Z = _rows(rng, 8)
         res = rt.submit("mc", Z).result(timeout=30.0)
@@ -483,7 +483,7 @@ def test_per_replica_span_counts_sum_to_model_totals_under_faults():
         breaker=dict(fail_threshold=1, reset_after_s=60.0),
         obs=obs,
     ) as rt:
-        digest = rt.publish("m", maclaurin.compile(m), exact=m, replicas=3)
+        digest = rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m, replicas=3))
         rng = np.random.default_rng(0)
         rt.predict("m", _rows(rng, 2))            # warm flush -> replica 0
         fi.fail_next(FaultInjector.replica_site(ENGINE_STEP, 1), 1)
@@ -527,7 +527,7 @@ def test_degraded_rows_never_appear_in_validity_spans():
         breaker=dict(fail_threshold=1, reset_after_s=60.0),
         obs=obs,
     ) as rt:
-        digest = rt.publish("m", maclaurin.compile(m), exact=m, replicas=2)
+        digest = rt.publish("m", maclaurin.compile(m), PublishSpec(exact=m, replicas=2))
         rng = np.random.default_rng(0)
         rt.predict("m", _rows(rng, 2))            # warm: 2 fast-path rows
         for i in range(2):

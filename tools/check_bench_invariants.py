@@ -37,7 +37,12 @@ is broken:
     conservation identity (served + failed + expired + closed ==
     admitted; submitted == admitted + shed) holds simultaneously in
     telemetry counters, tracer span counts and the Prometheus
-    rendering, with the first-class gauges present in the exposition.
+    rendering, with the first-class gauges present in the exposition;
+  * ``serving_http``: every HTTP prediction on the un-overloaded
+    workload succeeded, the conservation identity survives the network
+    hop, the queue drains to zero after the HTTP leg (zero hung
+    futures), requests still coalesce through the async bridge, and
+    the HTTP p50 overhead stays under a generous structural bound.
 
 Usage: ``python tools/check_bench_invariants.py [path-to-json]``
 Exits non-zero listing every violated invariant.
@@ -54,6 +59,9 @@ MIN_LABEL_PARITY = 0.99
 QUANT_ERR_REPRO_RTOL = 0.05     # measured == reported up to float noise
 QUANT_ERR_SLACK = 0.01          # int8 family error <= f32 error + this
 SCALEOUT_MONOTONIC_TOL = 0.9    # rows/s per count >= 0.9x best smaller count
+HTTP_OVERHEAD_MAX = 25.0        # HTTP p50 <= 25x in-process p50: catches a
+                                # structural regression (per-request
+                                # handshake, serialized bridge), not noise
 
 DEFAULT_PATH = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -382,6 +390,58 @@ def check_observability(payload: dict, problems: list[str]) -> None:
             )
 
 
+def check_serving_http(payload: dict, problems: list[str]) -> None:
+    section = payload.get("serving_http")
+    if not section or not section.get("rows") or not section.get("meta"):
+        problems.append("serving_http: section missing or empty")
+        return
+    paths = {r.get("path") for r in section["rows"]}
+    if paths != {"in_process", "http"}:
+        problems.append(
+            f"serving_http: need in_process+http rows, got {sorted(paths)}"
+        )
+    meta = section["meta"]
+    if meta.get("http_statuses_other", 1) != 0:
+        problems.append(
+            f"serving_http: {meta.get('http_statuses_other')!r} non-200 "
+            f"response(s) on a workload with no induced overload"
+        )
+    if meta.get("http_statuses_ok", 0) <= 0:
+        problems.append("serving_http: zero successful HTTP predictions")
+    overhead = meta.get("http_overhead_p50")
+    if overhead is None or overhead > HTTP_OVERHEAD_MAX:
+        problems.append(
+            f"serving_http: HTTP p50 overhead {overhead!r} > "
+            f"{HTTP_OVERHEAD_MAX}x in-process — the wire path regressed "
+            f"structurally (per-request handshake? serialized bridge?)"
+        )
+    if meta.get("http_coalescing_factor", 0) < 1.0:
+        problems.append(
+            f"serving_http: coalescing factor "
+            f"{meta.get('http_coalescing_factor')!r} < 1.0 through the "
+            f"async bridge"
+        )
+    if meta.get("queue_rows_after", 1) != 0:
+        problems.append(
+            f"serving_http: queue gauge {meta.get('queue_rows_after')!r} "
+            f"rows after the HTTP leg drained, must be 0 (hung futures?)"
+        )
+    cons = meta.get("conservation", {})
+    if cons.get("unaccounted") != 0:
+        problems.append(
+            f"serving_http: {cons.get('unaccounted')!r} request span(s) "
+            f"unaccounted after the HTTP leg"
+        )
+    if cons.get("submitted", 0) <= 0:
+        problems.append("serving_http: zero submitted requests traced")
+    if cons.get("submitted") != cons.get("admitted", 0) + cons.get("shed", 0):
+        problems.append(
+            f"serving_http: accounting leak — admitted "
+            f"{cons.get('admitted')!r} + shed {cons.get('shed')!r} != "
+            f"submitted {cons.get('submitted')!r}"
+        )
+
+
 def main(argv: list[str]) -> int:
     path = argv[1] if len(argv) > 1 else DEFAULT_PATH
     with open(path) as f:
@@ -395,14 +455,15 @@ def main(argv: list[str]) -> int:
     check_degraded(payload, problems)
     check_scaleout(payload, problems)
     check_observability(payload, problems)
+    check_serving_http(payload, problems)
     if problems:
         print(f"[bench-invariants] {len(problems)} violation(s) in {path}:")
         for p in problems:
             print(f"  FAIL {p}")
         return 1
     print(f"[bench-invariants] OK — model_size, family_compare, fastfood, "
-          f"runtime_throughput, overload, degraded_mode, scaleout and "
-          f"observability invariants hold in {path}")
+          f"runtime_throughput, overload, degraded_mode, scaleout, "
+          f"observability and serving_http invariants hold in {path}")
     return 0
 
 
